@@ -1,0 +1,104 @@
+"""Fig. 5 / Tables 13–14 analogue: GEMV/GEMM throughput model per bit combo.
+
+The paper measures TOPS of ABQKernel vs cuBLAS/CUTLASS W8A8/W4A4 on RTX
+GPUs. On TPU the dry-run container cannot measure wall-clock, so this
+benchmark reports the v5e roofline-model throughput for the same LLaMA-7B
+matrix shapes: time = max(bytes/HBM_bw, ops/int8_peak); TOPS = 2MNK/time.
+
+Weight bytes are the *packed* footprints our engine actually reads
+(bit-planes + scales), activations int8 + f32 scales, outputs bf16 —
+mirroring the Pallas kernel's data movement. The W8A8 row doubles as the
+SmoothQuant/cuBLAS baseline, so `speedup_vs_w8a8` is the analogue of the
+paper's 7.47× GEMV win (theirs: BTC vs INT8 TensorCore; ours: HBM bytes).
+
+It also validates the kernel numerics once per shape against the ref oracle
+(interpret mode) and reports the measured CPU-interpret microseconds as
+`us_per_call` (indicative only — NOT the modeled TPU time).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+HBM_BW = 819e9
+INT8_PEAK = 394e12
+
+# the paper's LLaMA-7B GEMV/GEMM shapes (Fig. 5, Tables 13-14)
+SHAPES = [
+    (1, 4096, 4096),
+    (1, 11008, 4096),
+    (1, 4096, 11008),
+    (8, 4096, 4096),
+    (8, 11008, 4096),
+]
+
+BITS = [(2, 8), (2, 4), (3, 8), (4, 8), (4, 4), (6, 6), (8, 8)]
+
+
+def modeled_time(m: int, k: int, n: int, w_bits: int, a_bits: int,
+                 bit_balance: bool = False) -> dict:
+    planes = w_bits if not bit_balance else w_bits + 1
+    w_bytes = planes * k * n / 8 + 2 * 4 * n  # packed planes + scale/zp
+    a_bytes = m * k + 4 * m  # int8 acts + f32 scales
+    o_bytes = 2 * m * n
+    total_bytes = w_bytes + a_bytes + o_bytes
+    # ops: one int8 MXU matmul per plane (weight-side decomposition)
+    ops = 2.0 * m * k * n * planes
+    t = max(total_bytes / HBM_BW, ops / INT8_PEAK)
+    return {"t": t, "bytes": total_bytes, "ops": ops,
+            "tops": 2.0 * m * k * n / t / 1e12}
+
+
+def run(print_fn=print) -> dict:
+    results = {}
+    for (m, k, n) in SHAPES:
+        base = modeled_time(m, k, n, 8, 8)
+        for (w, a) in BITS:
+            r = modeled_time(m, k, n, w, a)
+            key = f"({m},{k})x({k},{n}),w{w}a{a}"
+            speedup = base["t"] / r["t"]
+            results[key] = {"tops": r["tops"], "speedup_vs_w8a8": speedup}
+            print_fn(f"gemm_model,{key},tops={r['tops']:.2f},"
+                     f"speedup_vs_w8a8={speedup:.2f}")
+
+    # numerics spot-check: pallas-interpret vs oracle on a reduced shape
+    import jax.numpy as jnp
+
+    from benchmarks.common import time_call
+    from repro.core import QuantSpec, act_scales, pack_weight, quantize_act
+    from repro.kernels import ref as R
+    from repro.kernels.abq_matmul import abq_matmul_pallas
+
+    rng = np.random.default_rng(0)
+    m, k, n = 8, 512, 256
+    wmat = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    pw = pack_weight(wmat, QuantSpec(bits=2, bit_balance=True))
+    aspec = QuantSpec(bits=8, symmetric=True, granularity="per_token")
+    xs = act_scales(x, aspec)
+    xq = quantize_act(x, xs, aspec)
+    y_ref = R.abq_matmul_ref(xq, xs, pw.planes, pw.scale, pw.zero_point, k,
+                             out_dtype=jnp.float32)
+    us = time_call(
+        lambda: abq_matmul_pallas(xq, xs, pw.planes, pw.scale, pw.zero_point,
+                                  block_m=8, block_n=128, block_k=256,
+                                  out_dtype=jnp.float32, interpret=True))
+    y_pal = abq_matmul_pallas(xq, xs, pw.planes, pw.scale, pw.zero_point,
+                              block_m=8, block_n=128, block_k=256,
+                              out_dtype=jnp.float32, interpret=True)
+    err = float(jnp.max(jnp.abs(y_pal - y_ref)))
+    print_fn(f"gemm_kernel_check,w2*a8_{m}x{k}x{n},us_per_call={us:.0f},"
+             f"max_err_vs_ref={err:.2e}")
+    results["kernel_check_err"] = err
+
+    # paper-alignment: decode GEMV W2A8 speedup vs W8A8 should exceed ~3x
+    # (bytes ratio ~10/8... packed 2 planes vs 8 -> ~3.5-4x at these shapes)
+    key = "(1,4096)x(4096,4096),w2a8"
+    results["gemv_w2a8_speedup"] = results[key]["speedup_vs_w8a8"]
+    print_fn(f"gemm_check,gemv_w2a8_speedup>=3,"
+             f"{'PASS' if results[key]['speedup_vs_w8a8'] >= 3 else 'FAIL'}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Table 4 analogue: kernel-optimization ablation on the TPU cost model.
+
+The paper ablates {pipeline optimization, GEMV elimination, auto kernel
+search} on GPU wall-clock. The TPU equivalents (DESIGN.md §2) are evaluated
+on the v5e roofline cost model for the decode GEMV (1,4096)×(4096,4096),
+W2A8:
+
+  native        — no HBM/MXU overlap (bytes-time + compute-time ADD),
+                  weights read as dequantized int8 (no bit-plane packing),
+                  default 128³ blocking
+  +pipeline     — double-buffered HBM→VMEM streams (times MAX, not ADD) —
+                  Pallas provides this automatically; the ablation shows its
+                  modeled contribution
+  +bitplane     — packed 2-bit planes instead of int8 weights (the paper's
+                  GEMV Elimination analogue: shrink the bytes the GEMV must
+                  move — DESIGN.md §2)
+  +auto search  — pick (BM, BN, BK) minimizing modeled time under the VMEM
+                  budget (the paper's Auto Kernel Search)
+
+Also prints the chosen block configuration per step.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+HBM_BW = 819e9
+INT8_PEAK = 394e12
+VMEM_BYTES = 128 * 2**20  # v5e VMEM per core (approx)
+
+
+def kernel_model(m, k, n, *, w_bits, packed, overlap, bm, bn, bk):
+    """HBM traffic + MXU time for a tiled GEMM with bit-plane weights."""
+    m_eff = max(m, 8)
+    planes = w_bits if packed else 8  # unpacked = int8 container
+    # weight tiles stream once per (M/bm) pass
+    passes = max(m_eff // bm, 1)
+    w_bytes = passes * (planes * k * n / 8)
+    a_bytes = (n // bn) * (m_eff * k)  # act tile re-read per N block
+    o_bytes = 2 * m_eff * n
+    total_bytes = w_bytes + a_bytes + o_bytes
+    ops = 2.0 * m_eff * k * n * planes
+    t_mem = total_bytes / HBM_BW
+    t_cmp = ops / INT8_PEAK
+    t = max(t_mem, t_cmp) if overlap else t_mem + t_cmp
+    # VMEM: x tile + unpacked w tile + acc + packed tile
+    vmem = bm * bk + bk * bn + 4 * bm * bn + planes * bk * bn / 8
+    return {"t_us": t * 1e6, "bytes": total_bytes, "vmem": vmem}
+
+
+def auto_search(m, k, n, *, w_bits, packed, overlap):
+    best = None
+    for bm, bn, bk in itertools.product((8, 16, 32, 64, 128, 256),
+                                        (128, 256, 512),
+                                        (128, 256, 512, 1024, 2048)):
+        if bk > k or bn > n:
+            continue
+        r = kernel_model(m, k, n, w_bits=w_bits, packed=packed,
+                         overlap=overlap, bm=bm, bn=bn, bk=bk)
+        if r["vmem"] > VMEM_BYTES // 4:  # double-buffering head-room
+            continue
+        if best is None or r["t_us"] < best[1]["t_us"]:
+            best = ((bm, bn, bk), r)
+    return best
+
+
+def run(print_fn=print) -> dict:
+    m, k, n = 1, 4096, 4096
+    default_blocks = dict(bm=128, bn=128, bk=512)
+    steps = []
+    steps.append(("native", kernel_model(
+        m, k, n, w_bits=2, packed=False, overlap=False, **default_blocks)))
+    steps.append(("+pipeline", kernel_model(
+        m, k, n, w_bits=2, packed=False, overlap=True, **default_blocks)))
+    steps.append(("+bitplane(GEMV-elim analogue)", kernel_model(
+        m, k, n, w_bits=2, packed=True, overlap=True, **default_blocks)))
+    blocks, best = auto_search(m, k, n, w_bits=2, packed=True, overlap=True)
+    steps.append((f"+auto_search{blocks}", best))
+
+    results = {}
+    base = steps[0][1]["t_us"]
+    for name, r in steps:
+        results[name] = r["t_us"]
+        print_fn(f"kernel_ablation,{name},modeled_us={r['t_us']:.2f},"
+                 f"speedup_vs_native={base / r['t_us']:.2f},"
+                 f"bytes={r['bytes']:.3e}")
+    total_speedup = base / steps[-1][1]["t_us"]
+    # paper achieves 7.47x from its ablations; our byte-dominated model
+    # should show a healthy multiple as well
+    print_fn(f"kernel_ablation_check,total_speedup>=2,"
+             f"{'PASS' if total_speedup >= 2 else 'FAIL'}"
+             f" (total={total_speedup:.2f}x)")
+    results["total_speedup"] = total_speedup
+    return results
+
+
+if __name__ == "__main__":
+    run()

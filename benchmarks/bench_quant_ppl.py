@@ -1,0 +1,118 @@
+"""Tables 1/2/5/6/7 analogue: perplexity across quantization configs/methods.
+
+Trains the shared benchmark LM on the synthetic distribution, then measures
+held-out PPL for every (bits × method) cell:
+
+  methods: fp        — no quantization (paper's FP16 row)
+           rtn       — round-to-nearest, no calibration
+           abq       — the paper's full pipeline (SmoothQuant-init balance
+                       vectors + learnable clipping + compensation,
+                       DLC + AKL block-wise calibration)
+           abq-mse   — ablation: same learnables, OmniQuant-style MSE loss
+  configs: W8A8, W6A6, W4A8, W4A4, W3A8, W2A8, W2*A8, W2*A16, W4A4-g64
+
+Directional claims validated (EXPERIMENTS.md §Repro):
+  (1) bit balance: ppl(W2*A8) < ppl(W2A8)      [paper Table 1/2]
+  (2) calibration: ppl(abq) <= ppl(rtn) at low bits [Table 2]
+  (3) monotone in W bits at fixed method       [Tables 6/7]
+  (4) W8A8 ~ fp                                 [Table 7 W8A8 row]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import trained_bench_model
+from repro.core.calibration import CalibConfig, calibrate_model, stack_qstates
+from repro.data.synthetic import calibration_segments
+from repro.eval.ppl import bucket_accuracy, perplexity
+from repro.models.quantized import QuantizeConfig, quantize_model
+
+CONFIGS = [
+    ("W8A8", 8, 8, False, 0),
+    ("W6A6", 6, 6, False, 0),
+    ("W4A8", 4, 8, False, 0),
+    ("W4A4", 4, 4, False, 0),
+    ("W3A8", 3, 8, False, 0),
+    ("W2A8", 2, 8, False, 0),
+    ("W2*A8", 2, 8, True, 0),
+    ("W2*A6", 2, 6, True, 0),
+    ("W4A4-g64", 4, 4, False, 64),
+]
+
+# calibration is the expensive step (block-wise AdamW per config); run the
+# paper's full DLC+AKL pipeline on the configs where it matters (low bits,
+# the paper's W2* flagship, and the W4A4 battleground) and the MSE ablation
+# once; everything else reports RTN (the paper's own tables do the same for
+# high-bit rows).
+_CALIBRATED = {"W4A4", "W2A8", "W2*A8", "W2*A6"}
+_MSE_ABLATION = {"W2*A8"}
+
+
+def run(print_fn=print) -> dict:
+    params, cfg, ctx = trained_bench_model()
+    results: dict[str, float] = {}
+    ppl_fp = perplexity(params, cfg, ctx)
+    acc_fp = bucket_accuracy(params, cfg, ctx)
+    results["fp,none"] = ppl_fp
+    print_fn(f"quant_ppl,fp,none,ppl={ppl_fp:.3f},bucket_acc={acc_fp:.3f}")
+
+    import jax
+
+    calib_tokens = jnp.asarray(calibration_segments(
+        cfg.vocab_size, n_segments=2, seq_len=64, batch=2))
+
+    # one calibration per (w,a,bb,loss) combination we report
+    calib_cache: dict = {}
+
+    def get_calib(w, a, bb, loss):
+        key = (w, a, bb, loss)
+        if key not in calib_cache:
+            ccfg = CalibConfig(w_bits=w, a_bits=a, bit_balance=bb,
+                               epochs=4, loss=loss)
+            states = calibrate_model(params, calib_tokens, cfg, ccfg)
+            calib_cache[key] = {"blocks": stack_qstates(states)}
+        return calib_cache[key]
+
+    for name, w, a, bb, gs in CONFIGS:
+        qcfg = QuantizeConfig(w_bits=w, a_bits=a, bit_balance=bb,
+                              group_size=gs)
+        methods = ["rtn"]
+        if name in _CALIBRATED:
+            methods.append("abq")
+        if name in _MSE_ABLATION:
+            methods.append("abq-mse")
+        for method in methods:
+            if method == "rtn":
+                qp = quantize_model(params, cfg, qcfg)
+            else:
+                loss = "dlc_akl" if method == "abq" else "mse"
+                qp = quantize_model(params, cfg, qcfg,
+                                    calib=get_calib(w, a, bb, loss))
+            ppl = perplexity(qp, cfg, ctx)
+            acc = bucket_accuracy(qp, cfg, ctx)
+            results[f"{name},{method}"] = ppl
+            print_fn(f"quant_ppl,{name},{method},ppl={ppl:.3f},"
+                     f"bucket_acc={acc:.3f}")
+
+    # -- directional validations (the paper's claims) --
+    checks = {
+        "bit_balance_helps(W2*A8<W2A8,abq)":
+            results["W2*A8,abq"] < results["W2A8,abq"],
+        "calibration_helps(W2*A8 abq<=rtn)":
+            results["W2*A8,abq"] <= results["W2*A8,rtn"] * 1.02,
+        "monotone_bits(W8A8<=W4A8<=W2A8, rtn)":
+            results["W8A8,rtn"] <= results["W4A8,rtn"] * 1.02
+            <= results["W2A8,rtn"] * 1.05,
+        "w8a8_close_to_fp":
+            results["W8A8,rtn"] < ppl_fp * 1.05,
+    }
+    for k, ok in checks.items():
+        print_fn(f"quant_ppl_check,{k},{'PASS' if ok else 'FAIL'}")
+    results["checks"] = checks
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Shared benchmark utilities: the trained tiny LM every accuracy benchmark
+quantizes, plus timing helpers."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import ArchConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.models.blocks import ModelContext
+
+# The benchmark model: llama-family (the paper's eval family), sized so CPU
+# training reaches a clearly-learned state in ~2 minutes.
+BENCH_CFG = ArchConfig(
+    name="bench-llama", family="dense", n_layers=4, d_model=128,
+    n_heads=8, n_kv_heads=8, d_ff=384, vocab_size=512,
+)
+
+_CKPT_DIR = os.environ.get("REPRO_BENCH_CKPT", "/tmp/repro_bench_model")
+_TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "400"))
+
+
+def trained_bench_model(steps: int = _TRAIN_STEPS, seed: int = 0):
+    """Train (or load the cached) benchmark LM. Returns (params, cfg, ctx)."""
+    cfg = BENCH_CFG
+    ctx = ModelContext(cfg=cfg, remat=False)
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_params(key, cfg, dtype=jnp.float32)
+
+    last = ckpt.latest_step(_CKPT_DIR)
+    if last == steps:
+        params = ckpt.restore_like(_CKPT_DIR, steps, params)
+        return params, cfg, ctx
+
+    opt_cfg = optim.AdamWConfig(lr=2e-3, grad_clip_norm=1.0)
+    opt_state = optim.init(params, opt_cfg)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128))
+
+    @jax.jit
+    def step(p, o, batch, i):
+        def loss_of(pp):
+            return lm.loss_fn(pp, batch, cfg, ctx, n_loss_chunks=4)[0]
+
+        loss, grads = jax.value_and_grad(loss_of)(p)
+        lr = optim.cosine_with_warmup(i, base_lr=opt_cfg.lr, warmup=40,
+                                      total=steps)
+        p, o = optim.update(grads, o, p, opt_cfg, lr_scale=lr / opt_cfg.lr)
+        return p, o, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        b = ds.batch(i, 8)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt_state, loss = step(params, opt_state, b, jnp.asarray(i))
+        if i % 100 == 0:
+            print(f"  [bench-train] step={i} loss={float(loss):.3f}", flush=True)
+    print(f"  [bench-train] done in {time.time()-t0:.0f}s "
+          f"final loss={float(loss):.3f}", flush=True)
+    ckpt.save(_CKPT_DIR, steps, params)
+    return params, cfg, ctx
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds per call (CPU; indicative only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,259 @@
+"""Roofline derivation from the dry-run's compiled artifacts (§Roofline).
+
+Per (arch × shape × mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+(cost_analysis is post-SPMD per-device — verified in tests — so no /chips.)
+
+Plus the "useful work" anchors:
+  MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve), N_active excludes
+  non-routed experts; ratio MODEL_FLOPS/(HLO_FLOPs·chips) exposes remat and
+  padding waste.
+  For decode (memory-bound by construction) the roofline fraction is
+  ideal_bytes / HLO_bytes: ideal = packed weights + KV/state cache, the bytes
+  one step MUST move.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dryrun benchmarks/results/dryrun.json]
+      [--mesh 256] [--format md|json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Optional
+
+# v5e target (DESIGN.md §9)
+PEAK_BF16 = 197e12  # FLOP/s per chip
+PEAK_INT8 = 394e12
+HBM_BW = 819e9  # B/s per chip
+ICI_LINK = 50e9  # B/s per link
+
+_ARCH_CACHE: dict = {}
+
+
+def _arch_stats(arch: str) -> dict:
+    """Param counts (total / active) + serve-path byte footprints."""
+    if arch in _ARCH_CACHE:
+        return _ARCH_CACHE[arch]
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.models.quantized import QuantizeConfig, quantize_model
+
+    cfg = get_config(arch).with_kv_replication(16)
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+    def count(tree):
+        return sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(tree))
+
+    n_total = count(shapes)
+    n_expert = 0
+    if cfg.family == "moe":
+        moe = shapes["blocks"]["moe"]
+        n_expert = sum(count(moe[k]) for k in ("w_gate", "w_up", "w_down"))
+    n_active = n_total - n_expert * (1 - cfg.top_k / max(cfg.n_experts, 1))
+
+    qcfg = QuantizeConfig(w_bits=2, a_bits=8, bit_balance=True, tensor_par=16)
+    q_shapes = jax.eval_shape(lambda p: quantize_model(p, cfg, qcfg), shapes)
+    q_bytes = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                  for s in jax.tree_util.tree_leaves(q_shapes))
+
+    _ARCH_CACHE[arch] = {
+        "cfg": cfg, "n_total": n_total, "n_active": n_active,
+        "serve_weight_bytes": q_bytes,
+    }
+    return _ARCH_CACHE[arch]
+
+
+def _cache_bytes(arch: str, batch: int, seq_len: int) -> int:
+    import jax
+    import numpy as np
+
+    from repro.models import lm
+
+    cfg = _arch_stats(arch)["cfg"]
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, batch, seq_len))
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for s in jax.tree_util.tree_leaves(cache))
+
+
+def _probe_total(pr: dict, vals: list) -> float:
+    """Exact depth/batch extrapolation of an unrolled probe pair."""
+    g1, g2 = pr["gs"]
+    v1, v2 = vals
+    slope = (v2 - v1) / (g2 - g1)
+    scale_b = pr["batch_real"] / pr["batch_probe"]
+    return (v1 + slope * (pr["g_real"] - g1)) * scale_b
+
+
+def analyze_cell(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    from repro.configs import SHAPES
+
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    pr = rec.get("probe")
+    if pr:
+        # probe-corrected per-device totals (scan bodies fully counted);
+        # bytes are TPU-adjusted: minus XLA:CPU int8-dot materialization and
+        # donation-elided cache-threading copies (dryrun.tpu_artifact_bytes)
+        flops_dev = _probe_total(pr, pr["flops"])
+        raw_bytes = _probe_total(pr, pr["bytes"])
+        art = _probe_total(pr, pr.get("artifact_bytes", [0, 0]))
+        bytes_dev = max(raw_bytes - art, raw_bytes * 0.1)
+        coll_bytes = _probe_total(pr, pr["coll"])
+        coll = rec.get("collective_bytes_per_device", {})
+    else:
+        # full-module numbers: while-loop bodies counted ONCE (lower bound)
+        flops_dev = rec["flops_per_device"]
+        bytes_dev = rec["bytes_per_device"]
+        coll = rec.get("collective_bytes_per_device", {})
+        coll_bytes = sum(coll.values())
+
+    t_compute = flops_dev / PEAK_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes / ICI_LINK
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    stats = _arch_stats(rec["arch"])
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        model_flops = 6 * stats["n_active"] * tokens
+    else:
+        model_flops = 2 * stats["n_active"] * tokens
+    flops_ratio = model_flops / max(flops_dev * chips, 1.0)
+
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_global": flops_dev * chips,
+        "flops_ratio": flops_ratio,
+        "probe_corrected": bool(pr),
+        "coll_breakdown": {k: v for k, v in coll.items() if v},
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "args_gib": rec["memory"]["argument_bytes"] / 2**30,
+    }
+
+    if shape.kind == "decode":
+        ideal = (stats["serve_weight_bytes"]
+                 + _cache_bytes(rec["arch"], shape.global_batch,
+                                shape.seq_len)) / chips
+        out["ideal_bytes_per_dev"] = ideal
+        out["roofline_fraction"] = min(ideal / max(bytes_dev, 1.0), 1.0)
+        out["fraction_kind"] = "bytes(ideal/HLO)"
+    else:
+        # MFU-style: useful-compute time over the binding term
+        t_useful = model_flops / chips / PEAK_BF16
+        out["roofline_fraction"] = t_useful / max(max(terms.values()), 1e-12)
+        out["fraction_kind"] = "MFU-proxy"
+    out["suggestion"] = _suggest(out, shape)
+    return out
+
+
+def _suggest(out: dict, shape) -> str:
+    d = out["dominant"]
+    if d == "collective":
+        return ("collective-bound: overlap/reschedule the all-gathers "
+                "(fsdp prefetch) or widen per-chip shards")
+    if d == "memory":
+        if shape.kind == "decode":
+            return ("memory-bound (the ABQ regime): cut remaining HLO bytes "
+                    "— fuse dequant epilogues, drop fp32 scale reads, "
+                    "shrink KV scales")
+        return ("memory-bound: increase arithmetic intensity (fuse "
+                "elementwise chains, larger microbatch per chip, bf16 "
+                "intermediates)")
+    if out["flops_ratio"] < 0.5:
+        return ("compute-bound with low useful-FLOP ratio: reduce remat "
+                "recompute or padding FLOPs")
+    return "compute-bound near peak: tune matmul tiling / layouts"
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def render_md(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | chips | compute s | memory s | collective s | "
+           "dominant | roofline frac | MODEL/HLO flops |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.2f} ({r['fraction_kind']}"
+            f"{'' if r['probe_corrected'] else '; body-once LB'}) "
+            f"| {r['flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def merge_probes(records: list[dict], probes_dir: Optional[str]) -> None:
+    """Attach probe measurements (separate --probes-only runs) by cell key."""
+    if not probes_dir or not os.path.isdir(probes_dir):
+        return
+    by_key = {}
+    for fname in os.listdir(probes_dir):
+        if not fname.endswith(".json"):
+            continue
+        try:
+            for rec in load(os.path.join(probes_dir, fname)):
+                if rec.get("probe"):
+                    by_key[(rec["arch"], rec["shape"],
+                            rec["n_devices"])] = rec["probe"]
+        except Exception:
+            continue
+    for rec in records:
+        key = (rec.get("arch"), rec.get("shape"), rec.get("n_devices"))
+        if key in by_key and "probe" not in rec:
+            rec["probe"] = by_key[key]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dryrun", default="benchmarks/results/dryrun.json")
+    p.add_argument("--probes-dir", default="benchmarks/results/probes")
+    p.add_argument("--mesh", type=int, default=256,
+                   help="report cells for this device count (256|512|0=all)")
+    p.add_argument("--format", default="md", choices=["md", "json"])
+    p.add_argument("--out", default=None)
+    args = p.parse_args(argv)
+
+    records = load(args.dryrun)
+    merge_probes(records, args.probes_dir)
+    rows = []
+    for rec in records:
+        if args.mesh and rec.get("n_devices") != args.mesh:
+            continue
+        r = analyze_cell(rec)
+        if r:
+            rows.append(r)
+    rows.sort(key=lambda r: (r["shape"], r["arch"]))
+    if args.format == "md":
+        text = render_md(rows)
+    else:
+        text = json.dumps(rows, indent=1)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

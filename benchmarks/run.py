@@ -1,0 +1,69 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+Prints ``name,...,derived`` CSV lines per experiment (see DESIGN.md §10 for
+the table-to-code index) and a final summary. The dry-run / roofline tables
+(EXPERIMENTS.md §Dry-run/§Roofline) are produced by their own modules
+(repro.launch.dryrun, benchmarks.roofline) since they need the
+512-placeholder-device interpreter.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--fast", action="store_true",
+                   help="skip the trained-model PPL section (slowest)")
+    args = p.parse_args(argv)
+
+    t0 = time.time()
+    failures = []
+
+    def section(title):
+        print(f"\n===== {title} =====", flush=True)
+
+    section("Table 4 analogue: kernel optimization ablation (v5e model)")
+    from benchmarks import bench_kernel_ablation
+
+    r = bench_kernel_ablation.run()
+    if r["total_speedup"] < 2:
+        failures.append("kernel_ablation")
+
+    section("Fig. 5 / Tables 13-14 analogue: GEMM/GEMV throughput model")
+    from benchmarks import bench_gemm_bytes
+
+    r = bench_gemm_bytes.run()
+    if r["kernel_check_err"] > 1e-3:
+        failures.append("gemm_kernel_check")
+
+    section("Fig. 6 / Table 12 analogue: end-to-end memory & decode latency")
+    from benchmarks import bench_e2e_memory
+
+    r = bench_e2e_memory.run()
+    if not (r["ratio_fp16"] > 3.0 and r["ratio_w8a8"] > 1.8):
+        failures.append("e2e_memory")
+
+    if not args.fast:
+        section("Tables 1/2/5/6/7 analogue: quantization-config perplexity"
+                " (trains the benchmark LM on first run)")
+        from benchmarks import bench_quant_ppl
+
+        r = bench_quant_ppl.run()
+        for name, ok in r["checks"].items():
+            if not ok:
+                failures.append(f"quant_ppl:{name}")
+
+    section("summary")
+    print(f"benchmarks completed in {time.time()-t0:.0f}s; "
+          f"{'ALL CHECKS PASS' if not failures else 'FAILURES: ' + str(failures)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""End-to-end training driver example: train an LM for a few hundred steps
+with checkpoints, straggler watch, and crash-resume.
+
+    PYTHONPATH=src python examples/train_small.py              # ~10M, minutes
+    PYTHONPATH=src python examples/train_small.py --preset 100m --steps 300
+
+(The 100m preset is the assignment's "~100M model for a few hundred steps";
+on this CPU-only container it takes hours, so the default preset is a ~10M
+model that shows the same loss curve shape in minutes. Both run the exact
+production code path: repro.launch.train.run.)
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.supervisor import supervise
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--preset", default="10m", choices=["10m", "100m"])
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--ckpt", default="/tmp/repro_example_train")
+    p.add_argument("--inject-failure", action="store_true",
+                   help="crash mid-run to demo supervisor restart")
+    args = p.parse_args()
+
+    if args.preset == "100m":
+        # ~100M params: 12L d=512 ff=2048 vocab=8192 — register on the fly
+        import repro.configs as C
+
+        cfg = C.ArchConfig(name="example-100m", family="dense", n_layers=12,
+                           d_model=768, n_heads=12, n_kv_heads=12,
+                           d_ff=2048, vocab_size=8192)
+        import repro.configs.llama_7b as llama_mod
+
+        llama_mod.SMOKE = cfg  # reuse the llama entry with our config
+        argv = ["--arch", "llama-7b", "--smoke", "--steps", str(args.steps),
+                "--global-batch", "8", "--seq-len", "256"]
+    else:
+        argv = ["--arch", "llama-7b", "--smoke", "--steps", str(args.steps),
+                "--global-batch", "8", "--seq-len", "128"]
+    argv += ["--checkpoint-dir", args.ckpt, "--checkpoint-every", "50",
+             "--lr", "3e-3"]
+    if args.inject_failure:
+        argv += ["--fail-at-step", str(args.steps // 2)]
+    result = supervise(argv, max_restarts=2)
+    print(f"final loss: {result['final_loss']:.4f} "
+          f"(restarts: {result['restarts']}, "
+          f"stragglers flagged: {result['straggler_steps']})")
+
+
+if __name__ == "__main__":
+    main()

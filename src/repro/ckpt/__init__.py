@@ -1,0 +1,9 @@
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    all_steps,
+    latest_step,
+    restore_like,
+    save,
+)
+
+__all__ = ["AsyncCheckpointer", "all_steps", "latest_step", "restore_like", "save"]

@@ -1,0 +1,191 @@
+"""Architecture configs: the 10 assigned archs + the paper's LLaMA models.
+
+Each ``<arch>.py`` exports ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family config for CPU smoke tests). The registry
+maps ``--arch <id>`` CLI names to modules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+_REGISTRY = {
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    # the paper's own evaluation models
+    "llama-7b": "repro.configs.llama_7b",
+}
+
+ARCH_NAMES = tuple(_REGISTRY)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One transformer-family architecture (see DESIGN.md §6 for mapping)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    act: str = "silu"  # silu (SwiGLU) | gelu (GeGLU) | relu2 (squared ReLU)
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0  # per-expert ffn width (if != d_ff)
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2): one shared attention block applied every N ssm layers
+    shared_attn_every: int = 0
+    # --- vlm (llama-3.2-vision): groups of (k self layers + 1 cross layer)
+    cross_attn_every: int = 0
+    n_image_tokens: int = 0
+    # --- audio (musicgen): codebook heads over EnCodec tokens
+    n_codebooks: int = 0
+    # --- misc ---
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
+    vocab_pad_to: int = 256  # pad vocab so TP/vocab sharding divides
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        v, m = self.vocab_size, self.vocab_pad_to
+        return (v + m - 1) // m * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """long_500k runs only for sub-quadratic (SSM/hybrid) families."""
+        return self.family in ("ssm", "hybrid")
+
+    def kv_heads_for_mesh(self, tensor_par: int) -> int:
+        """Megatron-style KV-head replication so TP stays legal: the
+        effective KV head count is lcm(kv, tp) — whole-head replication,
+        divisible by the tensor axis. (kv=8 on a 16-way model axis -> 16.)"""
+        kv = self.n_kv_heads
+        if kv == 0:
+            return 0
+        import math
+
+        eff = math.lcm(kv, max(tensor_par, 1))
+        if self.n_heads % eff != 0:
+            raise ValueError(
+                f"{self.name}: q heads {self.n_heads} not divisible by "
+                f"effective kv heads {eff} (tp={tensor_par})"
+            )
+        return eff
+
+    def with_kv_replication(self, tensor_par: int) -> "ArchConfig":
+        """Return a config whose kv heads are replicated for this TP degree.
+        Param shapes change accordingly (the checkpoint loader replicates
+        real kv heads on load, like Megatron)."""
+        if self.n_kv_heads == 0:
+            return self
+        eff = self.kv_heads_for_mesh(tensor_par)
+        if eff == self.n_kv_heads:
+            return self
+        return dataclasses.replace(self, n_kv_heads=eff)
+
+    def validate(self) -> None:
+        assert self.d_model > 0 and self.n_layers > 0
+        if self.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            assert self.n_heads > 0
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm_state > 0
+            assert self.d_inner % self.ssm_headdim == 0
+        if self.family == "vlm":
+            assert self.cross_attn_every > 0 and self.n_image_tokens > 0
+        if self.family == "audio":
+            assert self.n_codebooks > 0
+
+
+# ---------------------------------------------------------------------------
+# input-shape regimes (assigned): every LM arch pairs with all four
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = importlib.import_module(_REGISTRY[name]).CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = importlib.import_module(_REGISTRY[name]).SMOKE
+    cfg.validate()
+    return cfg
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell is part of the dry-run matrix.
+
+    long_500k needs sub-quadratic attention (assignment spec): run for
+    ssm/hybrid, skip for full-attention archs.
+    """
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "skipped(full-attention arch; 500k dense KV is the quadratic regime)"
+    return True, ""

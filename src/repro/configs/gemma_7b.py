@@ -1,0 +1,18 @@
+"""gemma-7b [dense]: 28L d_model=3072 16H (MHA kv=16) d_ff=24576
+vocab=256000, GeGLU, head_dim=256, sqrt(d) embed scaling
+[arXiv:2403.08295; hf]."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-7b", family="dense",
+    n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+    head_dim=256, d_ff=24576, vocab_size=256000,
+    act="gelu", embed_scale=True, tie_embeddings=False,
+)
+
+SMOKE = ArchConfig(
+    name="gemma-7b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    head_dim=32, d_ff=128, vocab_size=512,
+    act="gelu", embed_scale=True,
+)

@@ -1,0 +1,21 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256; gated cross-attn image layers every 5th layer
+(80 self + 20 cross); vision frontend is a stub — input_specs provides
+precomputed patch embeddings (B, 1024, d_model)
+[hf:meta-llama/Llama-3.2-11B-Vision (family); unverified]."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256,
+    cross_attn_every=5, n_image_tokens=1024,
+    rope_theta=500_000.0,
+)
+
+SMOKE = ArchConfig(
+    name="llama-3.2-vision-90b-smoke", family="vlm",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512,
+    cross_attn_every=2, n_image_tokens=8,
+)

@@ -1,0 +1,15 @@
+"""llama-7b [dense]: the paper's primary evaluation model.
+32L d_model=4096 32H (MHA) d_ff=11008 vocab=32000 [arXiv:2302.13971]."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=32000,
+)
+
+SMOKE = ArchConfig(
+    name="llama-7b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512,
+)

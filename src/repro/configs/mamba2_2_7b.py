@@ -1,0 +1,18 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 attention-free, vocab=50280,
+ssm_state=128, SSD (state-space duality) [arXiv:2405.21060; unverified].
+vocab padded to 50432 for 16-way TP sharding (DESIGN.md §4)."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+)
+
+SMOKE = ArchConfig(
+    name="mamba2-2.7b-smoke", family="ssm",
+    n_layers=3, d_model=64, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=512,
+    ssm_state=16, ssm_headdim=16, ssm_chunk=16,
+)

@@ -1,0 +1,16 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000; pruned nemotron — squared-ReLU plain MLP
+[arXiv:2407.14679; hf]."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=16384, vocab_size=256000, act="relu2",
+)
+
+SMOKE = ArchConfig(
+    name="minitron-8b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512, act="relu2",
+)

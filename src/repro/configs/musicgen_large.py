@@ -1,0 +1,17 @@
+"""musicgen-large [audio]: 48L d_model=2048 32H (MHA kv=32) d_ff=8192
+vocab=2048 per codebook; decoder-only over EnCodec tokens (4 codebooks,
+delay pattern); the EnCodec encoder/decoder is a stub — input_specs provides
+the token streams [arXiv:2306.05284; hf]."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=2048, n_codebooks=4,
+)
+
+SMOKE = ArchConfig(
+    name="musicgen-large-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=128, n_codebooks=4,
+)

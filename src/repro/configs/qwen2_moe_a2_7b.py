@@ -1,0 +1,18 @@
+"""qwen2-moe-a2.7b [moe]: 24L d_model=2048 16H (GQA kv=16) per-expert
+d_ff=1408 vocab=151936, 4 shared + 60 routed top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=151936,
+    n_experts=60, top_k=4, n_shared_experts=4, moe_d_ff=1408,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-moe-a2.7b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=96, vocab_size=512,
+    n_experts=6, top_k=4, n_shared_experts=2, moe_d_ff=96,
+)

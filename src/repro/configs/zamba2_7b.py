@@ -1,0 +1,24 @@
+"""zamba2-7b [hybrid]: 81 Mamba2 layers + shared attention block.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64
+[arXiv:2411.15242; unverified]. The shared transformer block (attn + MLP,
+d_ff=14336) is applied every 6 ssm layers (weights shared across
+applications — Zamba-style).
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_headdim=64, ssm_expand=2, ssm_chunk=256,
+    shared_attn_every=6,
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-7b-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512,
+    ssm_state=16, ssm_headdim=16, ssm_expand=2, ssm_chunk=16,
+    shared_attn_every=2,
+)

@@ -1,0 +1,43 @@
+"""ABQ-LLM core: quantizers, bit-plane packing, calibration losses."""
+
+from repro.core.bitplane import (
+    pack_bitplanes,
+    padded_k,
+    unpack_bitplanes,
+    unpack_levels,
+)
+from repro.core.losses import akl_loss, block_mse, dlc_loss
+from repro.core.quantizers import (
+    PackedWeight,
+    QuantSpec,
+    act_scales,
+    dequantize_act,
+    dequantize_weight,
+    fake_quant_act,
+    fake_quant_weight,
+    pack_weight,
+    quantize_act,
+    quantize_weight,
+    weight_scales,
+)
+
+__all__ = [
+    "PackedWeight",
+    "QuantSpec",
+    "act_scales",
+    "akl_loss",
+    "block_mse",
+    "dequantize_act",
+    "dequantize_weight",
+    "dlc_loss",
+    "fake_quant_act",
+    "fake_quant_weight",
+    "pack_bitplanes",
+    "pack_weight",
+    "padded_k",
+    "quantize_act",
+    "quantize_weight",
+    "unpack_bitplanes",
+    "unpack_levels",
+    "weight_scales",
+]

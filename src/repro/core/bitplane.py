@@ -1,0 +1,100 @@
+"""Bit-plane packing: the storage format of the ABQ arbitrary-bit engine.
+
+The paper's BitPacking (§3.4, step 1) re-lays a q-bit quantized tensor from
+``[M, K, q]`` bit-interleaved form to ``[q, M, K]`` plane-major form so every
+1-bit matrix is contiguous for the Binary TensorCore. The TPU adaptation keeps
+the same plane-major idea but packs 32 contraction-dim bits per ``uint32``
+word — the natural vector-register width — giving HBM layout
+
+    planes : uint32 [n_planes, K/32, N]
+
+for a (K, N) weight. Plane ``s`` holds bit ``s`` of the *unsigned level
+index*; a value is reconstructed as ``sum_s 2^s * plane_s`` and dequantized
+with ``(q - zero_point) * scale``.
+
+K is padded up to a multiple of 32 with zero bits (zero level index); because
+the integer-GEMM identity subtracts ``zero_point * rowsum(x_q)`` computed over
+the *unpadded* K, padding contributes exactly ``-zp * 0`` and is harmless as
+long as the activation rows are zero-padded too (the kernels guarantee this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+
+def padded_k(k: int) -> int:
+    return (k + WORD_BITS - 1) // WORD_BITS * WORD_BITS
+
+
+def pack_bitplanes(q: Array, n_planes: int) -> Array:
+    """Pack unsigned level indices (K, N) int32 -> uint32 [n_planes, K/32, N].
+
+    Pure jnp; runs once offline per weight so clarity beats speed here.
+    """
+    if q.ndim != 2:
+        raise ValueError(f"expected 2-D level index, got shape {q.shape}")
+    k, n = q.shape
+    kp = padded_k(k)
+    if kp != k:
+        q = jnp.pad(q, ((0, kp - k), (0, 0)))
+    q = q.astype(jnp.uint32)
+    # bits: [n_planes, K, N]
+    shifts = jnp.arange(n_planes, dtype=jnp.uint32)[:, None, None]
+    bits = (q[None] >> shifts) & jnp.uint32(1)
+    # pack 32 consecutive K positions into one word
+    bits = bits.reshape(n_planes, kp // WORD_BITS, WORD_BITS, n)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))[
+        None, None, :, None
+    ]
+    words = jnp.sum(bits * weights, axis=2, dtype=jnp.uint32)
+    return words
+
+
+def unpack_bitplanes(planes: Array, k: int, dtype=jnp.int8) -> Array:
+    """uint32 [n_planes, K/32, N] -> binary [n_planes, K, N] in ``dtype``."""
+    n_planes, kw, n = planes.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, None, :, None]
+    bits = (planes[:, :, None, :] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(n_planes, kw * WORD_BITS, n)
+    return bits[:, :k, :].astype(dtype)
+
+
+def unpack_levels(planes: Array, k: int, dtype=jnp.int32) -> Array:
+    """Reconstruct unsigned level indices (K, N) from planes."""
+    n_planes = planes.shape[0]
+    bits = unpack_bitplanes(planes, k, dtype=jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(n_planes, dtype=jnp.uint32))[
+        :, None, None
+    ]
+    return jnp.sum(bits * weights, axis=0).astype(dtype)
+
+
+def pack_act_rows(x_q: Array) -> Array:
+    """Bit-pack an int8 activation matrix's *sign-magnitude planes*.
+
+    Unused by the default weight-side-only decomposition but kept as the
+    faithful two-sided variant (paper Eq. 8–10): returns uint32
+    [p, M, K/32] planes of the unsigned (level-index) activation.
+    """
+    if x_q.dtype != jnp.int8:
+        raise ValueError("expected int8 container")
+    m, k = x_q.shape
+    kp = padded_k(k)
+    x = x_q.astype(jnp.int32)
+    if kp != k:
+        x = jnp.pad(x, ((0, 0), (0, kp - k)))
+    # shift to unsigned levels: assumes symmetric container [-127,127] -> +127
+    levels = (x + 127).astype(jnp.uint32)
+    shifts = jnp.arange(8, dtype=jnp.uint32)[:, None, None]
+    bits = (levels[None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(8, m, kp // WORD_BITS, WORD_BITS)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))[
+        None, None, None, :
+    ]
+    return jnp.sum(bits * weights, axis=3, dtype=jnp.uint32)

@@ -1,0 +1,455 @@
+"""Block-wise ABQ-LLM calibration (paper §3.1–3.2, §4.1).
+
+For each transformer block i, learn
+  * balance vector ``s`` (per in-channel, log-parametrized; init from the
+    SmoothQuant rule),
+  * weight clipping ``α, β`` (per out-channel, sigmoid-parametrized, init≈1),
+  * distribution-compensation vectors ``a, b`` (rank-1 ``γ·a bᵀ`` on the
+    down_proj weight; trained only for the first and last blocks — γ there
+    is 1, everywhere else the zero-init of ``b`` keeps it inert),
+minimizing  L = DLC(d_q, d_fp, d_fp*) + AKL(attn_q ‖ attn_fp)  (Eq. 5)
+with AdamW (no weight decay), lr 5e-3 for s and 1e-2 for clip/compensation,
+over calibration segments, exactly the paper's §4.1 recipe (epochs/segments
+scaled by the caller; defaults here are CPU-sized).
+
+The quantized stream is propagated block to block (d_fp* uses the fp block on
+the quantized stream), so later blocks calibrate against realistic inputs.
+
+Works per-family:
+  dense/moe blocks — DLC + AKL (attention maps from the reference path);
+  ssm blocks       — DLC only (attention-free; DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import akl_loss, block_mse, dlc_loss
+from repro.core.quantizers import (
+    QuantSpec,
+    fake_quant_act,
+    fake_quant_weight,
+)
+from repro.optim import adamw
+
+Array = jax.Array
+
+_ATTN_LINEARS = ("wq", "wk", "wv", "wo")
+_MLP_LINEARS = ("w_gate", "w_up", "w_down")
+_SSM_LINEARS = ("wz", "wx", "wB", "wC", "wdt", "wout")
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibConfig:
+    w_bits: int = 4
+    a_bits: int = 4
+    bit_balance: bool = False
+    epochs: int = 20
+    lr_balance: float = 5e-3
+    lr_clip: float = 1e-2
+    loss: str = "dlc_akl"  # "dlc_akl" (paper) | "mse" (OmniQuant-style ablation)
+    akl_weight: float = 1.0
+    group_size: int = 0
+
+    @property
+    def wspec(self) -> QuantSpec:
+        return QuantSpec(
+            bits=self.w_bits,
+            bit_balance=self.bit_balance,
+            granularity="per_group" if self.group_size else "per_channel",
+            group_size=self.group_size or 128,
+            channel_axis=1,
+        )
+
+    @property
+    def aspec(self) -> QuantSpec:
+        return QuantSpec(bits=self.a_bits, symmetric=True, granularity="per_token")
+
+
+# ---------------------------------------------------------------------------
+# learnable quant-state init
+# ---------------------------------------------------------------------------
+
+
+def _init_linear_qstate(w: Array, with_comp: bool,
+                        s_init: Optional[Array] = None) -> dict:
+    k, n = w.shape
+    st = {
+        "log_s": jnp.zeros((k,), jnp.float32) if s_init is None
+        else jnp.log(jnp.maximum(s_init, 1e-5)),
+        # sigmoid(6.0) ≈ 0.9975 ≈ the paper's clip-init of 1
+        "alpha_raw": jnp.full((n,), 6.0, jnp.float32),
+        "beta_raw": jnp.full((n,), 6.0, jnp.float32),
+    }
+    if with_comp:
+        st["comp_a"] = jnp.ones((k,), jnp.float32)
+        st["comp_b"] = jnp.zeros((n,), jnp.float32)
+    return st
+
+
+def smoothquant_s_init(act_amax: Array, w: Array, alpha: float = 0.5) -> Array:
+    """SmoothQuant balance init: s_k = amax_x(k)^α / amax_w(k)^(1-α).
+
+    (Our convention scales the *weight* by s and divides the activation.)
+    """
+    w_amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1)
+    s_act = jnp.power(jnp.maximum(act_amax, 1e-5), alpha)
+    s_w = jnp.power(jnp.maximum(w_amax, 1e-5), 1.0 - alpha)
+    # activation divided by (s_act/s_w): our log_s stores the weight-side mult
+    return jnp.maximum(s_act / s_w, 1e-5)
+
+
+def init_block_qstate(block_params: dict, *, edge_block: bool,
+                      act_stats: Optional[dict] = None) -> dict:
+    """Create the learnable quant state mirroring one block's linears."""
+
+    def for_group(group: dict, names, group_name: str) -> dict:
+        out = {}
+        for name in names:
+            if name not in group:
+                continue
+            w = group[name]
+            with_comp = name == "w_down"  # compensation targets down_proj
+            s_init = None
+            if act_stats is not None:
+                s_init_amax = act_stats.get(group_name, {}).get(name)
+                if s_init_amax is not None:
+                    s_init = smoothquant_s_init(s_init_amax, w)
+            out[name] = _init_linear_qstate(w, with_comp, s_init)
+        return out
+
+    qstate: dict[str, Any] = {}
+    if "attn" in block_params:
+        qstate["attn"] = for_group(block_params["attn"], _ATTN_LINEARS, "attn")
+    if "mlp" in block_params:
+        qstate["mlp"] = for_group(block_params["mlp"], _MLP_LINEARS, "mlp")
+    if "ssm" in block_params:
+        qstate["ssm"] = for_group(block_params["ssm"], _SSM_LINEARS, "ssm")
+    if "moe" in block_params and "shared" in block_params["moe"]:
+        qstate["moe"] = {
+            "shared": for_group(block_params["moe"]["shared"], _MLP_LINEARS,
+                                "moe_shared")
+        }
+    return qstate
+
+
+def lr_tree_for(qstate, cfg: CalibConfig, *, edge_block: bool):
+    """Per-leaf LR: balance 5e-3; clip + compensation 1e-2; compensation is
+    frozen (lr 0 — the paper's γ=0) on non-edge blocks."""
+
+    def leaf_lr(key):
+        if key == "log_s":
+            return cfg.lr_balance
+        if key in ("comp_a", "comp_b"):
+            return cfg.lr_clip if edge_block else 0.0
+        return cfg.lr_clip
+
+    def walk(node):
+        return {
+            k: walk(v) if isinstance(v, dict) else leaf_lr(k)
+            for k, v in node.items()
+        }
+
+    return walk(qstate)
+
+
+# ---------------------------------------------------------------------------
+# fake-quant forward of one block
+# ---------------------------------------------------------------------------
+
+
+def fq_linear(x: Array, w: Array, qp: Optional[dict], cfg: CalibConfig) -> Array:
+    """Differentiable quantized linear with the learnable parametrization."""
+    if qp is None:
+        return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    wf = w.astype(jnp.float32)
+    s = jnp.exp(qp["log_s"])
+    xb = x.astype(jnp.float32) / s
+    wb = wf * s[:, None]
+    if "comp_a" in qp:
+        wb = wb + jnp.outer(qp["comp_a"], qp["comp_b"])
+    alpha = jax.nn.sigmoid(qp["alpha_raw"])
+    beta = jax.nn.sigmoid(qp["beta_raw"])
+    wq = fake_quant_weight(wb, cfg.wspec, alpha=alpha, beta=beta)
+    xq = fake_quant_act(xb, cfg.aspec)
+    return (xq @ wq).astype(x.dtype)
+
+
+def _fq_or_fp(quant: bool):
+    def apply(x, w, qp, cfg):
+        if quant and qp is not None:
+            return fq_linear(x, w, qp, cfg)
+        return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+    return apply
+
+
+def block_apply_fq(
+    block_params: dict,
+    qstate: Optional[dict],
+    x: Array,
+    arch_cfg,
+    calib_cfg: CalibConfig,
+    *,
+    quant: bool,
+    return_attn: bool = True,
+):
+    """Forward one block in fp (quant=False) or fake-quant mode.
+
+    Returns (out, attn_probs_or_None). Supports dense / moe(shared-expert
+    fq; routed experts fp during calibration — they are RTN'd at packing) /
+    ssm blocks.
+    """
+    from repro.models import ssm as ssm_mod
+    from repro.models.blocks import ModelContext
+    from repro.models.layers import activation, rms_norm
+    from repro.models import attention as attn_mod
+
+    lin = _fq_or_fp(quant)
+    ctx = ModelContext(cfg=arch_cfg, remat=False)
+    qs = qstate or {}
+
+    if "ssm" in block_params:  # mamba block: DLC only
+        h = rms_norm(x, block_params["norm"], arch_cfg.norm_eps)
+        p = block_params["ssm"]
+        q = qs.get("ssm", {})
+        b, s_len, _ = h.shape
+        nh, hd_, ns = arch_cfg.ssm_heads, arch_cfg.ssm_headdim, arch_cfg.ssm_state
+        z = lin(h, p["wz"], q.get("wz"), calib_cfg)
+        xs = lin(h, p["wx"], q.get("wx"), calib_cfg)
+        Bm = lin(h, p["wB"], q.get("wB"), calib_cfg)
+        Cm = lin(h, p["wC"], q.get("wC"), calib_cfg)
+        dt_raw = lin(h, p["wdt"], q.get("wdt"), calib_cfg)
+        xs, _ = ssm_mod._causal_conv(xs, p["conv_x"])
+        Bm, _ = ssm_mod._causal_conv(Bm, p["conv_B"])
+        Cm, _ = ssm_mod._causal_conv(Cm, p["conv_C"])
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        a_ = -jnp.exp(p["A_log"])
+        xh = xs.reshape(b, s_len, nh, hd_)
+        y = ssm_mod._ssd_chunked(xh, dt, a_, Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), arch_cfg.ssm_chunk)
+        y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, s_len, arch_cfg.d_inner).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        y = rms_norm(y, p["norm"], arch_cfg.norm_eps)
+        out = lin(y, p["wout"], q.get("wout"), calib_cfg)
+        return x + out, None
+
+    # attention block (dense / moe)
+    h = rms_norm(x, block_params["attn_norm"], arch_cfg.norm_eps)
+    ap = block_params["attn"]
+    aq = qs.get("attn", {})
+    b, s_len, _ = h.shape
+    hd = arch_cfg.resolved_head_dim
+    qv = lin(h, ap["wq"], aq.get("wq"), calib_cfg).reshape(
+        b, s_len, arch_cfg.n_heads, hd)
+    kv = lin(h, ap["wk"], aq.get("wk"), calib_cfg).reshape(
+        b, s_len, arch_cfg.n_kv_heads, hd)
+    vv = lin(h, ap["wv"], aq.get("wv"), calib_cfg).reshape(
+        b, s_len, arch_cfg.n_kv_heads, hd)
+    if arch_cfg.qk_norm:
+        qv = rms_norm(qv, ap["q_norm"], arch_cfg.norm_eps)
+        kv = rms_norm(kv, ap["k_norm"], arch_cfg.norm_eps)
+    from repro.models.layers import apply_rope
+
+    pos = jnp.arange(s_len)
+    qv = apply_rope(qv, pos, arch_cfg.rope_theta)
+    kv = apply_rope(kv, pos, arch_cfg.rope_theta)
+    rep = arch_cfg.n_heads // arch_cfg.n_kv_heads
+    kk = jnp.repeat(kv, rep, axis=2)
+    vx = jnp.repeat(vv, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qv.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / (hd**0.5)
+    mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    att = jnp.einsum("bhqk,bkhd->bqhd", probs, vx.astype(jnp.float32))
+    att = att.astype(x.dtype).reshape(b, s_len, arch_cfg.n_heads * hd)
+    att = lin(att, ap["wo"], aq.get("wo"), calib_cfg)
+    x = x + att
+
+    h = rms_norm(x, block_params["mlp_norm"], arch_cfg.norm_eps)
+    if "mlp" in block_params:
+        mp = block_params["mlp"]
+        mq = qs.get("mlp", {})
+        g = lin(h, mp["w_gate"], mq.get("w_gate"), calib_cfg)
+        if "w_up" in mp:
+            u = lin(h, mp["w_up"], mq.get("w_up"), calib_cfg)
+            hid = activation(g, arch_cfg.act) * u
+        else:
+            hid = activation(g, arch_cfg.act)
+        m = lin(hid, mp["w_down"], mq.get("w_down"), calib_cfg)
+    else:  # moe: shared experts fake-quant; routed experts fp here
+        from repro.models import moe as moe_mod
+
+        m, _ = moe_mod.moe_ffn(block_params["moe"], h, arch_cfg, mesh=None)
+        if "moe" in qs and "shared" in block_params["moe"]:
+            sp = block_params["moe"]["shared"]
+            sq = qs["moe"]["shared"]
+            g = lin(h, sp["w_gate"], sq.get("w_gate"), calib_cfg)
+            u = lin(h, sp["w_up"], sq.get("w_up"), calib_cfg)
+            hid = activation(g, arch_cfg.act) * u
+            m_shared_fq = lin(hid, sp["w_down"], sq.get("w_down"), calib_cfg)
+            # replace the fp shared contribution with the fq one
+            g0 = jnp.einsum("...k,kn->...n", h, sp["w_gate"].astype(h.dtype))
+            u0 = jnp.einsum("...k,kn->...n", h, sp["w_up"].astype(h.dtype))
+            m_shared_fp = jnp.einsum(
+                "...k,kn->...n", activation(g0, arch_cfg.act) * u0,
+                sp["w_down"].astype(h.dtype))
+            m = m - m_shared_fp + m_shared_fq
+    x = x + m
+    return x, probs
+
+
+# ---------------------------------------------------------------------------
+# per-block calibration loop
+# ---------------------------------------------------------------------------
+
+
+def calibrate_block(
+    block_params: dict,
+    x_q_in: Array,  # (n_seg, B, S, D) quantized-stream inputs
+    x_fp_in: Array,  # (n_seg, B, S, D) fp-stream inputs
+    arch_cfg,
+    cfg: CalibConfig,
+    *,
+    edge_block: bool,
+    act_stats: Optional[dict] = None,
+) -> tuple[dict, Array, Array]:
+    """Calibrate one block. Returns (qstate, new q-stream, new fp-stream)."""
+    # Compensation vectors exist in every block's state (uniform structure,
+    # so per-block states stack into one tree for vectorized packing) but are
+    # frozen (lr 0 == the paper's γ=0) except on the first/last block.
+    qstate = init_block_qstate(block_params, edge_block=edge_block,
+                               act_stats=act_stats)
+    opt_cfg = adamw.AdamWConfig(lr=cfg.lr_clip, weight_decay=0.0)
+    opt_state = adamw.init(qstate, opt_cfg)
+    lr_tree = lr_tree_for(qstate, cfg, edge_block=edge_block)
+    has_attn = "attn" in block_params
+    use_akl = cfg.loss == "dlc_akl" and has_attn
+
+    def loss_fn(qs, xq, xfp):
+        d_q, attn_q = block_apply_fq(block_params, qs, xq, arch_cfg, cfg,
+                                     quant=True, return_attn=use_akl)
+        d_fp, attn_fp = block_apply_fq(block_params, None, xfp, arch_cfg, cfg,
+                                       quant=False, return_attn=use_akl)
+        d_fp_star, _ = block_apply_fq(block_params, None, xq, arch_cfg, cfg,
+                                      quant=False, return_attn=False)
+        if cfg.loss == "mse":
+            return block_mse(d_q.astype(jnp.float32), d_fp.astype(jnp.float32))
+        total = dlc_loss(d_q.astype(jnp.float32), d_fp.astype(jnp.float32),
+                         d_fp_star.astype(jnp.float32))
+        if use_akl and attn_q is not None:
+            total = total + cfg.akl_weight * akl_loss(attn_q, attn_fp)
+        return total
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def opt_step(qs, opt_s, grads):
+        return adamw.update(grads, opt_s, qs, opt_cfg, lr_tree=lr_tree)
+
+    n_seg = x_q_in.shape[0]
+    for _ in range(cfg.epochs):
+        for i in range(n_seg):
+            _, grads = grad_fn(qstate, x_q_in[i], x_fp_in[i])
+            qstate, opt_state = opt_step(qstate, opt_state, grads)
+
+    # propagate streams
+    @jax.jit
+    def fwd_q(xq):
+        return block_apply_fq(block_params, qstate, xq, arch_cfg, cfg,
+                              quant=True, return_attn=False)[0]
+
+    @jax.jit
+    def fwd_fp(xfp):
+        return block_apply_fq(block_params, None, xfp, arch_cfg, cfg,
+                              quant=False, return_attn=False)[0]
+
+    new_q = jnp.stack([fwd_q(x_q_in[i]) for i in range(n_seg)])
+    new_fp = jnp.stack([fwd_fp(x_fp_in[i]) for i in range(n_seg)])
+    return qstate, new_q, new_fp
+
+
+def calibrate_model(
+    params: dict,
+    calib_tokens: Array,  # (n_seg, B, S) int32
+    arch_cfg,
+    cfg: CalibConfig,
+    *,
+    collect_act_stats: bool = True,
+) -> list[dict]:
+    """Sequential block-wise calibration over the whole model.
+
+    Returns a list of per-block qstates (length n_layers) that
+    `repro.models.quantized.quantize_model` consumes after tree-stacking.
+    Supports the uniform-stack families (dense/moe/ssm); hybrid/vlm calibrate
+    their uniform sub-stacks the same way (edge = first/last of the stack).
+    """
+    from repro.models import lm as lm_mod
+    from repro.models.blocks import ModelContext
+
+    ctx = ModelContext(cfg=arch_cfg, remat=False)
+    n_seg = calib_tokens.shape[0]
+    embeds = jnp.stack([
+        lm_mod.embed_tokens(params, calib_tokens[i], arch_cfg, ctx)
+        for i in range(n_seg)
+    ])
+    x_q = embeds
+    x_fp = embeds
+    n_layers = arch_cfg.n_layers
+    states = []
+    for layer in range(n_layers):
+        block_params = jax.tree.map(lambda a: a[layer], params["blocks"])
+        act_stats = (
+            _collect_act_stats(block_params, x_fp, arch_cfg)
+            if collect_act_stats else None
+        )
+        qstate, x_q, x_fp = calibrate_block(
+            block_params, x_q, x_fp, arch_cfg, cfg,
+            edge_block=(layer == 0 or layer == n_layers - 1),
+            act_stats=act_stats,
+        )
+        states.append(qstate)
+    return states
+
+
+def stack_qstates(states: list[dict]) -> dict:
+    """Per-block qstate list -> stacked tree for quantize_model."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _collect_act_stats(block_params, x_fp, arch_cfg) -> dict:
+    """Per-linear input absmax (for the SmoothQuant s-init), from the fp
+    stream. Only the block-input-fed linears need stats; inner ones reuse
+    the block input amax as a cheap proxy."""
+    from repro.models.layers import rms_norm
+
+    x0 = x_fp.reshape(-1, x_fp.shape[-1]).astype(jnp.float32)
+    stats: dict[str, dict[str, Array]] = {}
+    if "attn" in block_params:
+        h = rms_norm(x0, block_params["attn_norm"], arch_cfg.norm_eps)
+        amax = jnp.max(jnp.abs(h), axis=0)
+        stats["attn"] = {
+            k: amax for k in _ATTN_LINEARS
+            if k in block_params["attn"]
+            and block_params["attn"][k].shape[0] == amax.shape[0]
+        }  # wq/wk/wv see the block input; wo (K = H·hd) has no stats -> s=1
+        h2 = rms_norm(x0, block_params["mlp_norm"], arch_cfg.norm_eps)
+        amax2 = jnp.max(jnp.abs(h2), axis=0)
+        if "mlp" in block_params:
+            stats["mlp"] = {
+                k: amax2 for k in _MLP_LINEARS
+                if k in block_params["mlp"]
+                and block_params["mlp"][k].shape[0] == amax2.shape[0]
+            }  # w_down (K = ff) has no stats -> s=1, learnable
+    elif "ssm" in block_params:
+        h = rms_norm(x0, block_params["norm"], arch_cfg.norm_eps)
+        amax = jnp.max(jnp.abs(h), axis=0)
+        stats["ssm"] = {k: amax for k in ("wz", "wx", "wB", "wC", "wdt")
+                        if k in block_params["ssm"]}
+    return stats

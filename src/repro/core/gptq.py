@@ -1,0 +1,77 @@
+"""GPTQ baseline (Frantar et al. 2022) — the paper's weight-only comparator.
+
+Hessian-based error compensation: quantize the weight one input-dimension at
+a time, distributing each dimension's rounding error onto the not-yet-
+quantized dimensions through the inverse Hessian of the layerwise
+reconstruction objective  H = 2·XᵀX + λI.
+
+Offline, numpy-based (runs once per linear at packing time, like the
+paper's baselines). Our weight layout is (K=in, N=out); GPTQ walks K.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.quantizers import QuantSpec
+
+
+def gptq_quantize(
+    w: np.ndarray,  # (K, N) fp32
+    x_calib: np.ndarray,  # (T, K) calibration inputs to this linear
+    spec: QuantSpec,
+    percdamp: float = 0.01,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (levels (K,N) int32, scale (1,N), zp (1,N))."""
+    w = np.asarray(w, np.float64).copy()
+    k, n = w.shape
+
+    h = 2.0 * (x_calib.astype(np.float64).T @ x_calib.astype(np.float64))
+    damp = percdamp * np.mean(np.diag(h)) + 1e-8
+    h[np.diag_indices(k)] += damp
+
+    # per-output-channel scales from the raw weight range
+    if spec.symmetric or spec.bit_balance:
+        amax = np.abs(w).max(axis=0, keepdims=True)
+        scale = np.maximum(amax, 1e-8) / spec.qmax_abs
+        zp = np.full((1, n), float(spec.default_zero_point))
+    else:
+        wmax = w.max(axis=0, keepdims=True)
+        wmin = w.min(axis=0, keepdims=True)
+        scale = np.maximum((wmax - wmin) / (spec.num_levels - 1), 1e-8)
+        zp = -wmin / scale
+
+    # explicit OBS loop: quantize dim i, push the rounding error onto the
+    # not-yet-quantized dims through the (downdated) inverse Hessian.
+    hinv = np.linalg.inv(h)
+    q_levels = np.zeros((k, n), np.int32)
+    for i in range(k):
+        wi = w[i, :]
+        qi = np.clip(np.round(wi / scale[0] + zp[0]), 0, spec.level_max)
+        q_levels[i] = qi.astype(np.int32)
+        dq = (qi - zp[0]) * scale[0]
+        e = wi - dq
+        d = hinv[i, i]
+        if i + 1 < k and d > 1e-12:
+            col = hinv[i + 1:, i]
+            w[i + 1:, :] -= np.outer(col / d, e)
+            # rank-1 downdate: inverse of the remaining submatrix
+            hinv_next = hinv[i + 1:, i + 1:] - np.outer(col, col) / d
+            hinv = np.zeros((k, k))
+            hinv[i + 1:, i + 1:] = hinv_next
+    return q_levels, scale.astype(np.float32), zp.astype(np.float32)
+
+
+def gptq_pack_linear(w, x_calib, spec: QuantSpec):
+    """GPTQ-quantize then bit-plane pack -> PackedWeight (serving format)."""
+    import jax.numpy as jnp
+
+    from repro.core.bitplane import pack_bitplanes
+    from repro.core.quantizers import PackedWeight
+
+    levels, scale, zp = gptq_quantize(np.asarray(w, np.float32),
+                                      np.asarray(x_calib, np.float32), spec)
+    planes = pack_bitplanes(jnp.asarray(levels), spec.storage_bits)
+    return PackedWeight(planes=planes, scale=jnp.asarray(scale),
+                        zero_point=jnp.asarray(zp), bits=spec.bits,
+                        k=w.shape[0])

@@ -1,0 +1,55 @@
+"""Calibration losses of ABQ-LLM: DLC (Eq. 2) and AKL (Eq. 4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-8
+
+
+def _cos(a: Array, b: Array, axis: int = -1) -> Array:
+    num = jnp.sum(a * b, axis=axis)
+    den = jnp.linalg.norm(a, axis=axis) * jnp.linalg.norm(b, axis=axis)
+    return num / jnp.maximum(den, _EPS)
+
+
+def dlc_loss(d_q: Array, d_fp: Array, d_fp_star: Array) -> Array:
+    """Double Log-Cosine distribution-correction loss (Eq. 2).
+
+    ``d_q``       quantized block output (quantized stream input),
+    ``d_fp``      full-precision block output (clean fp input),
+    ``d_fp_star`` fp block applied to the quantized stream's input.
+
+    All are (batch, seq, d). Cosine is per token; the two log terms anchor the
+    quantized output to both the clean and the drifted fp distribution. Cosines
+    are clamped to (eps, 1] so the loss is finite and -> 0 at perfect match.
+    """
+    c1 = jnp.clip(_cos(d_q, d_fp), _EPS, 1.0)
+    c2 = jnp.clip(_cos(d_q, d_fp_star), _EPS, 1.0)
+    return jnp.mean(-jnp.log(c1) - jnp.log(c2))
+
+
+def _kl(p: Array, q: Array, axis: int = -1) -> Array:
+    p = jnp.clip(p, _EPS, 1.0)
+    q = jnp.clip(q, _EPS, 1.0)
+    return jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=axis)
+
+
+def akl_loss(attn_q: Array, attn_fp: Array) -> Array:
+    """Attention-aware symmetric KL divergence (Eq. 4).
+
+    ``attn_*`` are attention probability maps (..., q_len, kv_len), rows
+    summing to 1. Symmetric KL restores the first-token attention-sink
+    pattern that quantization disrupts (paper Fig. 2).
+    """
+    kl_fwd = _kl(attn_q, attn_fp)
+    kl_bwd = _kl(attn_fp, attn_q)
+    return jnp.mean(kl_fwd + kl_bwd)
+
+
+def block_mse(d_q: Array, d_fp: Array) -> Array:
+    """OmniQuant-style plain block-reconstruction MSE (ablation baseline)."""
+    return jnp.mean(jnp.square(d_q - d_fp))

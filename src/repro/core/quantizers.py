@@ -1,0 +1,364 @@
+"""Uniform affine quantizers for ABQ-LLM.
+
+Implements the paper's quantization grid conventions (§3.1–3.3):
+
+* weights: asymmetric uniform, per-output-channel (or per-group g128) scale and
+  zero-point, with learnable clipping of the min/max range (``alpha``/``beta``)
+  and an optional rank-1 distribution-compensation term ``gamma * a b^T``
+  folded into the weight before quantization (Eq. 3);
+* activations / KV cache: symmetric per-token (per-head-token for KV) into a
+  signed int8 container, regardless of the logical bit-width p <= 8;
+* the *bit balance* strategy (§3.3): an n-bit balanced grid uses the symmetric
+  level set {-2^{n-1}, ..., -1, 0, 1, ..., 2^{n-1}} (2^n + 1 levels), stored in
+  ceil(log2(2^n + 1)) bit-planes.
+
+Everything is pure-functional jnp; fake-quant paths use a straight-through
+estimator so calibration gradients flow to the learnable parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantization grid.
+
+    Attributes:
+      bits: logical bit-width n (1..8).
+      symmetric: symmetric signed grid (activations) vs asymmetric unsigned
+        grid with zero-point (weights).
+      bit_balance: use the paper's balanced 2^n + 1 level grid (W n* configs).
+        Implies a symmetric grid centred at 0.
+      granularity: one of 'per_tensor' | 'per_channel' | 'per_token' |
+        'per_group'.
+      group_size: contraction-dim group size for 'per_group' (paper: 128).
+      channel_axis: which axis carries the quantization channels. For weights
+        stored (in_features, out_features) this is 1; for per-token activations
+        (..., features) the scales live on all leading axes (axis = -1 reduced).
+    """
+
+    bits: int = 8
+    symmetric: bool = False
+    bit_balance: bool = False
+    granularity: str = "per_channel"
+    group_size: int = 128
+    channel_axis: int = 1
+
+    def __post_init__(self):
+        if not (1 <= self.bits <= 8):
+            raise ValueError(f"bits must be in [1, 8], got {self.bits}")
+        if self.granularity not in (
+            "per_tensor",
+            "per_channel",
+            "per_token",
+            "per_group",
+        ):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.bit_balance and self.bits >= 8:
+            raise ValueError("bit_balance with bits>=8 overflows the int8 container")
+
+    # ---- grid geometry -------------------------------------------------
+    @property
+    def qmax_abs(self) -> int:
+        """Largest magnitude on a symmetric grid."""
+        if self.bit_balance:
+            return 2 ** (self.bits - 1)  # {-2^{n-1} .. 2^{n-1}}, 2^n+1 levels
+        return 2 ** (self.bits - 1) - 1 if self.bits > 1 else 1
+
+    @property
+    def num_levels(self) -> int:
+        if self.bit_balance:
+            return 2**self.bits + 1
+        return 2**self.bits
+
+    @property
+    def storage_bits(self) -> int:
+        """Bit-planes needed to store the unsigned level index."""
+        return max(1, math.ceil(math.log2(self.num_levels)))
+
+    @property
+    def level_min(self) -> int:
+        """Smallest unsigned stored level (always 0)."""
+        return 0
+
+    @property
+    def level_max(self) -> int:
+        return self.num_levels - 1
+
+    @property
+    def default_zero_point(self) -> int:
+        """Zero point for symmetric grids stored unsigned."""
+        if self.bit_balance:
+            return 2 ** (self.bits - 1)
+        if self.symmetric:
+            return 2 ** (self.bits - 1) - 1 if self.bits > 1 else 1
+        return 0  # asymmetric: computed from data
+
+
+# ---------------------------------------------------------------------------
+# scale / zero-point computation
+# ---------------------------------------------------------------------------
+
+
+def _reduce_axes_for(spec: QuantSpec, ndim: int) -> tuple:
+    """Axes reduced when computing scales."""
+    if spec.granularity == "per_tensor":
+        return tuple(range(ndim))
+    if spec.granularity == "per_token":
+        return (ndim - 1,)  # reduce over features, keep token axes
+    if spec.granularity == "per_channel":
+        ax = spec.channel_axis % ndim
+        return tuple(i for i in range(ndim) if i != ax)
+    raise ValueError(f"per_group handled separately; got {spec.granularity}")
+
+
+def weight_scales(
+    w: Array,
+    spec: QuantSpec,
+    alpha: Optional[Array] = None,
+    beta: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Per-channel (or per-tensor/group) scale + zero point for a weight.
+
+    ``alpha``/``beta`` are the paper's learnable clipping parameters:
+    ``w_max = alpha * max(w)``, ``w_min = beta * min(w)`` (per channel).
+    They enter through a sigmoid in the calibration parametrization; here we
+    accept them already in (0, 1]-ish space and simply multiply.
+
+    Returns (scale, zero_point) broadcastable against ``w``; zero_point is a
+    float during calibration (rounded only at packing time).
+    """
+    if spec.granularity == "per_group":
+        return _group_scales(w, spec, alpha, beta)
+    axes = _reduce_axes_for(spec, w.ndim)
+    wmax = jnp.max(w, axis=axes, keepdims=True)
+    wmin = jnp.min(w, axis=axes, keepdims=True)
+    if alpha is not None:
+        wmax = wmax * alpha
+    if beta is not None:
+        wmin = wmin * beta
+    if spec.symmetric or spec.bit_balance:
+        amax = jnp.maximum(jnp.abs(wmax), jnp.abs(wmin))
+        scale = jnp.maximum(amax, _EPS) / spec.qmax_abs
+        zp = jnp.full_like(scale, float(spec.default_zero_point))
+        return scale, zp
+    # asymmetric: grid [0, 2^n - 1]
+    wmax = jnp.maximum(wmax, wmin + _EPS)  # degenerate-range guard
+    scale = (wmax - wmin) / (spec.num_levels - 1)
+    scale = jnp.maximum(scale, _EPS)
+    zp = -wmin / scale
+    return scale, zp
+
+
+def _group_scales(w, spec, alpha, beta):
+    """Per-group scales: contraction dim (axis 0 for (in, out) weights) is
+    split into groups of ``group_size``; each (group, out-channel) cell gets
+    its own scale/zp. Returned with a leading broadcastable layout
+    ``(n_groups, 1, out)`` against ``w`` reshaped (n_groups, gs, out)."""
+    k, n = w.shape
+    gs = spec.group_size
+    if k % gs != 0:
+        raise ValueError(f"in_features {k} not divisible by group_size {gs}")
+    wg = w.reshape(k // gs, gs, n)
+    wmax = jnp.max(wg, axis=1, keepdims=True)
+    wmin = jnp.min(wg, axis=1, keepdims=True)
+    if alpha is not None:
+        wmax = wmax * alpha
+    if beta is not None:
+        wmin = wmin * beta
+    if spec.symmetric or spec.bit_balance:
+        amax = jnp.maximum(jnp.abs(wmax), jnp.abs(wmin))
+        scale = jnp.maximum(amax, _EPS) / spec.qmax_abs
+        zp = jnp.full_like(scale, float(spec.default_zero_point))
+        return scale, zp
+    wmax = jnp.maximum(wmax, wmin + _EPS)
+    scale = jnp.maximum((wmax - wmin) / (spec.num_levels - 1), _EPS)
+    zp = -wmin / scale
+    return scale, zp
+
+
+def act_scales(x: Array, spec: QuantSpec) -> Array:
+    """Symmetric per-token (or per-tensor) activation scale."""
+    if spec.granularity == "per_token":
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    elif spec.granularity == "per_tensor":
+        amax = jnp.max(jnp.abs(x))
+    else:
+        raise ValueError(
+            f"activations support per_token/per_tensor, got {spec.granularity}"
+        )
+    return jnp.maximum(amax, _EPS) / spec.qmax_abs
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize / fake-quant
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(
+    w: Array, scale: Array, zp: Array, spec: QuantSpec
+) -> Array:
+    """w -> unsigned integer levels in [0, num_levels-1] (int32)."""
+    if spec.granularity == "per_group":
+        k, n = w.shape
+        wg = w.reshape(k // spec.group_size, spec.group_size, n)
+        q = jnp.round(wg / scale + zp)
+        q = jnp.clip(q, 0, spec.level_max)
+        return q.reshape(k, n).astype(jnp.int32)
+    q = jnp.round(w / scale + zp)
+    q = jnp.clip(q, 0, spec.level_max)
+    return q.astype(jnp.int32)
+
+
+def dequantize_weight(q: Array, scale: Array, zp: Array, spec: QuantSpec) -> Array:
+    if spec.granularity == "per_group":
+        k, n = q.shape
+        qg = q.reshape(k // spec.group_size, spec.group_size, n).astype(scale.dtype)
+        return ((qg - zp) * scale).reshape(k, n)
+    return (q.astype(scale.dtype) - zp) * scale
+
+
+def quantize_act(x: Array, scale: Array, spec: QuantSpec) -> Array:
+    """x -> signed int8 container values in [-qmax_abs, qmax_abs]."""
+    q = jnp.round(x / scale)
+    lo = -float(spec.qmax_abs) if (spec.symmetric or spec.bit_balance) else 0.0
+    if spec.bits == 8 and spec.symmetric and not spec.bit_balance:
+        lo = -127.0  # keep -128 free: exactness under negation
+    q = jnp.clip(q, lo, float(spec.qmax_abs))
+    return q.astype(jnp.int8)
+
+
+def dequantize_act(q: Array, scale: Array) -> Array:
+    return q.astype(scale.dtype) * scale
+
+
+def _ste_round(x: Array) -> Array:
+    """Straight-through round: identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant_weight(
+    w: Array,
+    spec: QuantSpec,
+    alpha: Optional[Array] = None,
+    beta: Optional[Array] = None,
+) -> Array:
+    """Differentiable quantize->dequantize for calibration (STE round).
+
+    Gradients flow to ``w`` (identity through round/clip interior) and to
+    ``alpha``/``beta`` through the scale computation.
+    """
+    scale, zp = weight_scales(w, spec, alpha, beta)
+    if spec.granularity == "per_group":
+        k, n = w.shape
+        wg = w.reshape(k // spec.group_size, spec.group_size, n)
+        q = jnp.clip(_ste_round(wg / scale + zp), 0, spec.level_max)
+        return ((q - zp) * scale).reshape(k, n)
+    q = jnp.clip(_ste_round(w / scale + zp), 0, spec.level_max)
+    return (q - zp) * scale
+
+
+def fake_quant_act(x: Array, spec: QuantSpec) -> Array:
+    scale = act_scales(x, spec)
+    lo = -float(spec.qmax_abs)
+    if spec.bits == 8 and not spec.bit_balance:
+        lo = -127.0
+    q = jnp.clip(_ste_round(x / scale), lo, float(spec.qmax_abs))
+    return q * scale
+
+
+# ---------------------------------------------------------------------------
+# packed weight container used by the serving path / kernels
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class PackedWeight:
+    """Offline-quantized weight in bit-plane form.
+
+    Attributes:
+      planes: uint32 [n_planes, K/32, N] bit-packed binary matrices
+        (plane s holds bit s of the unsigned level index).
+      scale: fp32 per-channel scale, broadcastable to (K, N) -> shape (1, N)
+        or per-group (K/gs, 1, N).
+      zero_point: fp32 zero point, same shape as scale.
+      bits: logical bit-width (for bookkeeping; n_planes = storage bits).
+      k: unpadded contraction length.
+    """
+
+    planes: Array
+    scale: Array
+    zero_point: Array
+    bits: int
+    k: int
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return (
+            (ga("planes"), self.planes),
+            (ga("scale"), self.scale),
+            (ga("zero_point"), self.zero_point),
+        ), (self.bits, self.k)
+
+    def tree_flatten(self):
+        return (self.planes, self.scale, self.zero_point), (self.bits, self.k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        planes, scale, zp = children
+        bits, k = aux
+        return cls(planes, scale, zp, bits, k)
+
+    @property
+    def n_planes(self) -> int:
+        return self.planes.shape[0]
+
+    @property
+    def out_features(self) -> int:
+        return self.planes.shape[-1]
+
+    def nbytes(self) -> int:
+        return (
+            self.planes.size * 4 + self.scale.size * 4 + self.zero_point.size * 4
+        )
+
+
+def pack_weight(
+    w: Array,
+    spec: QuantSpec,
+    alpha: Optional[Array] = None,
+    beta: Optional[Array] = None,
+    compensation: Optional[Array] = None,
+) -> PackedWeight:
+    """Quantize ``w`` (K, N) offline and pack into bit-planes.
+
+    ``compensation`` is the paper's rank-1 term ``a b^T`` (already formed),
+    added to w before quantization (Eq. 3 with gamma = 1).
+    """
+    from repro.core import bitplane  # local import to avoid cycle
+
+    if compensation is not None:
+        w = w + compensation
+    scale, zp = weight_scales(w, spec, alpha, beta)
+    q = quantize_weight(w, scale, zp, spec)
+    planes = bitplane.pack_bitplanes(q, spec.storage_bits)
+    # squeeze the keepdims scale down to a canonical broadcast shape
+    return PackedWeight(
+        planes=planes,
+        scale=scale.astype(jnp.float32),
+        zero_point=zp.astype(jnp.float32),
+        bits=spec.bits,
+        k=w.shape[0],
+    )

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticLM, calibration_segments
+
+__all__ = ["DataConfig", "SyntheticLM", "calibration_segments"]

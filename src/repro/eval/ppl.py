@@ -1,0 +1,83 @@
+"""Perplexity + synthetic zero-shot-style probes.
+
+The paper evaluates on WikiText2/C4 perplexity and six zero-shot tasks. This
+container has no internet/weights, so the benchmarks train a small LM on the
+deterministic synthetic distribution (repro.data.synthetic) and evaluate:
+  * ppl        — next-token perplexity on held-out synthetic segments
+                 (paper's §4.2 analogue; sentence length = cfg.seq_len);
+  * bucket_acc — accuracy of predicting the successor *bucket* (the planted
+                 structure of the distribution), the analogue of the paper's
+                 zero-shot accuracy tables (§4.3): a discriminative probe
+                 that degrades with quantization the way task accuracy does.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.models.blocks import ModelContext
+
+
+def perplexity(params, cfg: ArchConfig, ctx: ModelContext, *,
+               n_batches: int = 4, batch: int = 4, seq_len: int = 128,
+               seed: int = 1234) -> float:
+    """Held-out = SAME planted distribution (same seed -> same transition
+    structure), unseen sample indices (>= 10k; training uses < 4k)."""
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                seed=seed, n_codebooks=cfg.n_codebooks))
+    total, count = 0.0, 0.0
+
+    @jax.jit
+    def nll(p, batch_):
+        loss, _ = lm.loss_fn(p, batch_, cfg, ctx, n_loss_chunks=4)
+        return loss
+
+    for i in range(n_batches):
+        b = ds.batch(10_000 + i, batch)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        total += float(nll(params, b))
+        count += 1
+    return float(np.exp(total / count))
+
+
+def bucket_accuracy(params, cfg: ArchConfig, ctx: ModelContext, *,
+                    n_batches: int = 2, batch: int = 4, seq_len: int = 64,
+                    seed: int = 1234) -> float:
+    """Fraction of positions where the argmax next-token falls in the true
+    successor bucket of the current token (the planted transition)."""
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                                seed=seed, n_codebooks=cfg.n_codebooks))
+    bucket_of = ds._bucket_of
+
+    @jax.jit
+    def predict(p, tokens):
+        h, _ = lm.forward_hidden(p, tokens, cfg, ctx)
+        from repro.models.layers import rms_norm
+        from repro.models.loss import logits_last_token
+
+        h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h,
+                            lm.lm_head_weight(p, cfg).astype(h.dtype)) \
+            if not isinstance(lm.lm_head_weight(p, cfg), jnp.ndarray) is None \
+            else None
+        return logits
+
+    hits, total = 0, 0
+    for i in range(n_batches):
+        b = ds.batch(20_000 + i, batch)
+        tokens = jnp.asarray(b["tokens"])
+        h, _ = lm.forward_hidden(params, tokens, cfg, ctx)
+        from repro.models.layers import apply_linear, rms_norm
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = apply_linear(h, lm.lm_head_weight(params, cfg))
+        pred = np.asarray(jnp.argmax(logits[:, :-1, :cfg.vocab_size], axis=-1))
+        cur = np.asarray(tokens[:, :-1])
+        hits += int(np.sum(bucket_of[pred] == bucket_of[cur]))
+        total += pred.size
+    return hits / max(total, 1)

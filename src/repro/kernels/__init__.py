@@ -1,0 +1,25 @@
+"""Pallas TPU kernels (+ XLA-path twins and pure-jnp oracles).
+
+Kernels:
+  abq_matmul        — arbitrary-bit quantized GEMM (the paper's ABQKernel)
+  act_quant         — fused per-token ReQuant
+  flash_attention   — causal GQA flash attention for prefill
+"""
+
+from repro.kernels.ops import (
+    abq_linear,
+    abq_matmul,
+    act_quant,
+    decode_attention,
+    default_backend,
+    flash_attention,
+)
+
+__all__ = [
+    "abq_linear",
+    "abq_matmul",
+    "act_quant",
+    "decode_attention",
+    "default_backend",
+    "flash_attention",
+]

@@ -1,0 +1,164 @@
+"""ABQKernel for TPU: arbitrary-bit quantized GEMM as a Pallas kernel.
+
+TPU-native reconstruction of the paper's BTC engine (DESIGN.md §2):
+
+  Y[M, N] = x_scale ⊙ w_scale ⊙ ( Σ_s 2^s (X_q @ Wˢ) − w_zp ⊙ rowsum(X_q) )
+
+* ``X_q``  int8 [M, K]   — per-token symmetric activation container (any p ≤ 8)
+* ``Wˢ``   bit-planes packed uint32 [P, K/32, N] — only q/16 of the bf16 bytes
+  cross HBM→VMEM, which is where the decode-GEMV win lives on TPU.
+* unpack (VPU shift/mask) happens on the VMEM tile inside the K-loop; each
+  plane feeds a 128-aligned int8×int8→int32 MXU matmul; the ``2^s`` plane
+  weights and the affine dequant run in the epilogue (the paper's
+  Bit Reduction step).
+
+Grid: (M/BM, N/BN, K/BK), K innermost ("arbitrary" semantics) so the fp32
+accumulator lives in VMEM scratch across the K sweep. Pallas double-buffers
+the HBM→VMEM streams automatically — the analogue of the paper's cp.async
+pipeline (Appendix D, Computational Pipeline Optimization).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+WORD = 32
+
+
+def _unpack_words(words: Array, bk: int, bn: int) -> Array:
+    """uint32 (BK/32, BN) -> int8 {0,1} (BK, BN).
+
+    VPU shift+mask; the reshape interleaves word-bits back into contraction
+    order (bit b of word w is contraction index 32*w + b).
+    """
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)[None, :, None]
+    bits = (words[:, None, :] >> shifts) & jnp.uint32(1)
+    return bits.reshape(bk, bn).astype(jnp.int8)
+
+
+def _abq_kernel(
+    x_ref,  # int8 (BM, BK)
+    planes_ref,  # uint32 (P, BK/32, BN)
+    xs_ref,  # f32 (BM, 1)
+    ws_ref,  # f32 (1, BN)
+    zp_ref,  # f32 (1, BN)
+    o_ref,  # (BM, BN) out dtype
+    acc_ref,  # f32 VMEM scratch (BM, BN)
+    rs_ref,  # f32 VMEM scratch (BM, 1)
+    *,
+    n_planes: int,
+    k_steps: int,
+    out_dtype,
+):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        rs_ref[...] = jnp.zeros_like(rs_ref)
+
+    x = x_ref[...]
+    bm, bk = x.shape
+    bn = o_ref.shape[-1]
+
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for s in range(n_planes):  # static unroll over planes (P <= 8, usually 2-4)
+        w_bits = _unpack_words(planes_ref[s], bk, bn)
+        part = jax.lax.dot_general(
+            x,
+            w_bits,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc += part << s
+    acc_ref[...] += acc.astype(jnp.float32)
+    rs_ref[...] += jnp.sum(
+        x.astype(jnp.int32), axis=1, keepdims=True
+    ).astype(jnp.float32)
+
+    @pl.when(kstep == k_steps - 1)
+    def _epilogue():
+        deq = xs_ref[...] * (
+            ws_ref[...] * (acc_ref[...] - zp_ref[...] * rs_ref[...])
+        )
+        o_ref[...] = deq.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def abq_matmul_pallas(
+    x_q: Array,
+    x_scale: Array,
+    planes: Array,
+    w_scale: Array,
+    w_zp: Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    out_dtype=jnp.bfloat16,
+    interpret: bool = False,
+) -> Array:
+    """Launch the ABQ GEMM. Shapes as in `repro.kernels.ref.abq_matmul_ref`
+    with K already padded to a multiple of 32 (`bitplane.pack_bitplanes` pads;
+    the ops wrapper zero-pads the activation rows to match).
+
+    M is padded to block_m inside; N and K must tile by (block_n, block_k) —
+    production model dims are 128-aligned, the ops wrapper pads otherwise.
+    """
+    m, kk = x_q.shape
+    n_planes, kw, n = planes.shape
+    if kw * WORD != kk:
+        raise ValueError(f"planes imply K={kw * WORD}, activations have K={kk}")
+    block_k = min(block_k, kk)
+    block_n = min(block_n, n)
+    if kk % block_k != 0 or block_k % WORD != 0:
+        raise ValueError(f"K={kk} must tile by block_k={block_k} (mult of 32)")
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must tile by block_n={block_n}")
+    pm = (m + block_m - 1) // block_m * block_m
+    if pm != m:
+        x_q = jnp.pad(x_q, ((0, pm - m), (0, 0)))
+        x_scale = jnp.pad(x_scale, ((0, pm - m), (0, 0)))
+    k_steps = kk // block_k
+    grid = (pm // block_m, n // block_n, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _abq_kernel,
+            n_planes=n_planes,
+            k_steps=k_steps,
+            out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kq: (i, kq)),
+            pl.BlockSpec(
+                (n_planes, block_k // WORD, block_n),
+                lambda i, j, kq: (0, kq, j),
+            ),
+            pl.BlockSpec((block_m, 1), lambda i, j, kq: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j, kq: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kq: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kq: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_q, planes, x_scale, w_scale, w_zp)
+    return out[:m]

@@ -1,0 +1,61 @@
+"""Fused per-token activation quantization ("ReQuant") Pallas kernel.
+
+The paper fuses online activation quantization into adjacent operators
+(§3.4 "Engine Implementation", Fig. 4b). On TPU the equivalent is a rowwise
+VPU kernel: absmax → scale → round → int8, one pass over the row in VMEM,
+so the bf16 activation never round-trips HBM between the producer op and
+the quantized GEMM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _act_quant_kernel(x_ref, q_ref, s_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "qmax", "interpret")
+)
+def act_quant_pallas(
+    x: Array,
+    *,
+    block_m: int = 256,
+    qmax: float = 127.0,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """x bf16/f32 [M, D] -> (int8 [M, D], f32 [M, 1]) per-token symmetric."""
+    m, d = x.shape
+    block_m = min(block_m, m)
+    pm = (m + block_m - 1) // block_m * block_m
+    if pm != m:
+        x = jnp.pad(x, ((0, pm - m), (0, 0)))
+    grid = (pm // block_m,)
+    q, s = pl.pallas_call(
+        functools.partial(_act_quant_kernel, qmax=qmax),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pm, d), jnp.int8),
+            jax.ShapeDtypeStruct((pm, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:m], s[:m]

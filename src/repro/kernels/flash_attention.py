@@ -1,0 +1,176 @@
+"""Causal GQA flash attention (prefill) as a Pallas TPU kernel.
+
+Standard online-softmax tiling (FlashAttention-2 schedule) adapted to the TPU
+memory hierarchy: q/k/v tiles stream HBM→VMEM per BlockSpec, the running
+(max, sum, acc) state lives in VMEM scratch across the KV sweep, and the MXU
+sees 128-aligned (BQ×D)·(D×BK) and (BQ×BK)·(BK×D) matmuls.
+
+GQA is handled in the index maps: query-head h reads kv-head h // group_size,
+so no materialized `jnp.repeat` of K/V (that repeat is pure HBM waste — it is
+one of the things this kernel exists to delete).
+
+Causality prunes whole KV blocks: for q block i, kv blocks with
+start > q_end are skipped via `pl.when` (they contribute nothing), which
+halves the work for long prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, BQ, D)
+    k_ref,  # (1, BK, D)
+    v_ref,  # (1, BK, D)
+    o_ref,  # (1, BQ, D)
+    m_ref,  # VMEM (BQ, 1) f32
+    l_ref,  # VMEM (BQ, 1) f32
+    acc_ref,  # VMEM (BQ, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    kv_steps: int,
+    q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q + q_offset
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (BQ, BK)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype),
+            v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(k_start <= q_start + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "scale",
+        "block_q",
+        "block_k",
+        "q_offset",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> Array:
+    """q: [B, Sq, H, D]; k/v: [B, Skv, KVH, D] -> [B, Sq, H, D].
+
+    H % KVH == 0 (GQA). Sq % block_q == 0 and Skv % block_k == 0 are required
+    (the ops wrapper pads); D should be 128-aligned for the MXU.
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError(f"seq lens ({sq},{skv}) must tile by ({block_q},{block_k})")
+    kv_steps = skv // block_k
+
+    # layout: fold heads into the batch grid axis; keep (seq, d) as the tile
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+
+    grid = (b * h, sq // block_q, kv_steps)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh // group, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            kv_steps=kv_steps,
+            q_offset=q_offset,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

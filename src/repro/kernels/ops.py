@@ -1,0 +1,395 @@
+"""jit'd public wrappers for the kernels, with backend dispatch.
+
+Every op has three interchangeable execution paths:
+
+* ``pallas``  — the TPU kernel (`abq_matmul.py`, `act_quant.py`,
+  `flash_attention.py`). Used on real TPU; exercised in tests via
+  ``interpret=True``.
+* ``xla``     — a pure-jnp implementation with the *same memory layout and
+  math* (packed bit-planes in HBM, unpack-then-int-matmul, online-softmax
+  chunked attention). This is what the multi-pod dry-run lowers, so
+  cost_analysis/HLO reflect the technique's true bytes/FLOPs.
+* ``ref``     — the tiny oracle in `ref.py` (tests only).
+
+``backend='auto'`` picks pallas on TPU, xla elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.core.quantizers import PackedWeight
+from repro.kernels import ref as _ref
+from repro.kernels.abq_matmul import abq_matmul_pallas
+from repro.kernels.act_quant import act_quant_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+Array = jax.Array
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve(backend: str) -> str:
+    return default_backend() if backend == "auto" else backend
+
+
+# ---------------------------------------------------------------------------
+# activation quantization (ReQuant)
+# ---------------------------------------------------------------------------
+
+
+def act_quant(
+    x: Array, bits: int = 8, backend: str = "auto", interpret: bool = False
+) -> tuple[Array, Array]:
+    """Per-token symmetric quantization of x[..., D] -> (int8, f32 scales)."""
+    qmax = float(2 ** (bits - 1) - 1) if bits > 1 else 1.0
+    if bits == 8:
+        qmax = 127.0
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    backend = _resolve(backend)
+    if backend == "pallas":
+        q, s = act_quant_pallas(x2, qmax=qmax, interpret=interpret)
+    else:
+        q, s = _ref.act_quant_ref(x2, qmax=qmax)
+    return q.reshape(*lead, d), s.reshape(*lead, 1)
+
+
+# ---------------------------------------------------------------------------
+# arbitrary-bit GEMM
+# ---------------------------------------------------------------------------
+
+
+def _abq_matmul_xla(
+    x_q: Array,
+    x_scale: Array,
+    pw: PackedWeight,
+    out_dtype=jnp.bfloat16,
+) -> Array:
+    """XLA path — identical math to the Pallas kernel, jnp ops.
+
+    The packed planes are unpacked to {0,1} int8 and contracted on the int8
+    unit (preferred_element_type=int32). HLO bytes show the packed weight
+    reads; HLO flops show the n_planes int matmuls — the roofline of the
+    technique is visible to cost_analysis.
+    """
+    n_planes = pw.planes.shape[0]
+    w_bits = bitplane.unpack_bitplanes(pw.planes, pw.k, dtype=jnp.int8)
+
+    if pw.scale.ndim == 3:  # per-group g128: scale/zp are (G, 1, N)
+        m = x_q.shape[0]
+        n = pw.out_features
+        g = pw.scale.shape[0]
+        gs = pw.k // g
+        xg = x_q[:, : pw.k].reshape(m, g, gs)
+        wg = w_bits[:, : pw.k].reshape(n_planes, g, gs, n)
+        acc = jnp.zeros((g, m, n), jnp.int32)
+        for s in range(n_planes):
+            part = jnp.einsum("mgk,gkn->gmn", xg, wg[s],
+                              preferred_element_type=jnp.int32)
+            acc = acc + (part << s)
+        rowsum = jnp.sum(xg.astype(jnp.int32), axis=2).T[:, :, None]  # (G,M,1)
+        out = jnp.sum(
+            pw.scale * (acc.astype(jnp.float32) - pw.zero_point * rowsum),
+            axis=0,
+        )
+        return (x_scale * out).astype(out_dtype)
+
+    acc = jnp.zeros((x_q.shape[0], pw.out_features), jnp.int32)
+    for s in range(n_planes):
+        part = jax.lax.dot_general(
+            x_q,
+            w_bits[s],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + (part << s)
+    rowsum = jnp.sum(x_q.astype(jnp.int32), axis=1, keepdims=True)
+    out = x_scale * (
+        pw.scale * (acc.astype(jnp.float32) - pw.zero_point * rowsum)
+    )
+    return out.astype(out_dtype)
+
+
+def abq_matmul(
+    x_q: Array,
+    x_scale: Array,
+    pw: PackedWeight,
+    *,
+    out_dtype=jnp.bfloat16,
+    backend: str = "auto",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """Quantized GEMM: x_q int8 [..., K] × packed weight -> bf16 [..., N]."""
+    lead = x_q.shape[:-1]
+    kk = x_q.shape[-1]
+    x2 = x_q.reshape(-1, kk)
+    s2 = x_scale.reshape(-1, 1)
+    kp = bitplane.padded_k(pw.k)
+    if kk != kp:
+        if kk != pw.k:
+            raise ValueError(f"activation K={kk} != weight K={pw.k}")
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - kk)))
+    backend = _resolve(backend)
+    if backend == "pallas":
+        out = abq_matmul_pallas(
+            x2,
+            s2,
+            pw.planes,
+            pw.scale,
+            pw.zero_point,
+            block_m=block_m,
+            block_n=block_n,
+            block_k=block_k,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
+    else:
+        out = _abq_matmul_xla(x2, s2, pw, out_dtype=out_dtype)
+    return out.reshape(*lead, pw.out_features)
+
+
+def abq_linear(
+    x: Array,
+    pw: PackedWeight,
+    *,
+    act_bits: int = 8,
+    out_dtype=jnp.bfloat16,
+    backend: str = "auto",
+    interpret: bool = False,
+) -> Array:
+    """ReQuant + ABQ GEMM: bf16 [..., K] -> bf16 [..., N]."""
+    x_q, x_scale = act_quant(x, bits=act_bits, backend=backend, interpret=interpret)
+    return abq_matmul(
+        x_q, x_scale, pw, out_dtype=out_dtype, backend=backend, interpret=interpret
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _flash_xla(
+    q: Array,
+    k: Array,
+    v: Array,
+    causal: bool,
+    scale: float,
+    q_offset: int,
+    block_k: int = 1024,
+    block_q: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Online-softmax chunked attention in pure jnp (lax.scan over KV blocks,
+    lax.map over Q blocks). Same O(S) memory behaviour as the Pallas kernel —
+    this is what the dry-run compiles, so prefill_32k does not materialize an
+    S×S score tensor."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    orig_sq = sq
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q:
+        pad = block_q - sq % block_q
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sq = q.shape[1]
+    if skv % block_k:
+        pad = block_k - skv % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kv_steps = k.shape[1] // block_k
+    kb = k.reshape(b, kv_steps, block_k, kvh, d)
+    vb = v.reshape(b, kv_steps, block_k, kvh, d)
+
+    def one_q_block(args):
+        qi, qblk = args  # qblk: (b, block_q, h, d)
+        qf = qblk.astype(jnp.float32) * scale
+
+        def body(carry, kv):
+            m_prev, l_prev, acc = carry
+            kv_i, kblk, vblk = kv
+            kf = kblk.astype(jnp.float32)
+            vf = vblk.astype(jnp.float32)
+            # GQA without repeat: fold group into q-head axis
+            qg = qf.reshape(b, block_q, kvh, group, d)
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kf)
+            rows = qi * block_q + q_offset + jnp.arange(block_q)
+            cols = kv_i * block_k + jnp.arange(k.shape[1] // kv_steps)
+            if causal:
+                mask = rows[:, None] >= cols[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+            # mask kv padding
+            valid = cols < skv
+            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vf)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, block_q, kvh, group), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, block_q, kvh, group), jnp.float32)
+        a0 = jnp.zeros((b, block_q, kvh, group, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body,
+            (m0, l0, a0),
+            (jnp.arange(kv_steps), kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4)),
+            unroll=unroll,
+        )
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out.reshape(b, block_q, h, d)
+
+    q_blocks = q.reshape(b, sq // block_q, block_q, h, d).transpose(1, 0, 2, 3, 4)
+    _, outs = jax.lax.scan(
+        lambda _, xs: (None, one_q_block(xs)),
+        None,
+        (jnp.arange(sq // block_q), q_blocks),
+        unroll=unroll,
+    )
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return out[:, :orig_sq].astype(q.dtype)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    backend: str = "auto",
+    interpret: bool = False,
+    unroll: bool = False,
+    block_q: int = 1024,
+    block_k: int = 1024,
+) -> Array:
+    """q [B,Sq,H,D] × k/v [B,Skv,KVH,D] -> [B,Sq,H,D] (GQA, causal)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    backend = _resolve(backend)
+    if backend == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+            interpret=interpret,
+        )
+    return _flash_xla(q, k, v, causal, scale, q_offset,
+                      block_k=block_k, block_q=block_q, unroll=unroll)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_scale: Optional[Array] = None,
+    v_scale: Optional[Array] = None,
+    *,
+    scale: Optional[float] = None,
+    length: Optional[Array] = None,
+    fused_dequant: Optional[bool] = None,
+) -> Array:
+    """Single-token attention over a (possibly int8-quantized) KV cache.
+
+    q:        [B, 1, H, D]
+    k_cache:  [B, KVH, S, D] (int8 or bf16; attention-native layout,
+              §Perf iteration 3 — no per-step transpose of the cache)
+    k_scale:  [B, KVH, S] per-token-per-head dequant scales (if int8)
+    length:   [B] valid prefix length (positions >= length are masked)
+
+    Memory-bound op: the dominant bytes are the cache read.
+
+    fused_dequant=True (§Perf iteration 1): contract q directly against the
+    int8 cache and apply the per-token scale to the (B,KVH,G,S) logits /
+    fold v_scale into the probs — the f32 dequantized cache copy (4× the
+    int8 bytes) never materializes. Exact same math: the scale is constant
+    along the contracted D axis. fused_dequant=False keeps the naive
+    dequant-then-attend path (the pre-iteration baseline, kept for A/B).
+    """
+    import os as _os
+
+    mode = fused_dequant
+    if mode is None:  # A/B toggle for §Perf iterations
+        mode = _os.environ.get("REPRO_DECODE_ATTN", "int8")
+    if mode is True:
+        mode = "int8"
+    if mode is False:
+        mode = "naive"
+    b, _, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qf = q.astype(jnp.float32).reshape(b, kvh, group, d) * scale
+
+    if mode == "int8" and k_cache.dtype == jnp.int8 and k_scale is not None:
+        # §Perf iteration 2: fully-integer QK and PV contractions — the int8
+        # cache is contracted on the int8 unit (preferred int32), so no f32
+        # copy of the cache (4× its bytes) ever materializes. q and the
+        # v_scale-folded probs are quantized per row (the paper's int8
+        # attention BMMs / FastTransformer regime).
+        q_amax = jnp.max(jnp.abs(qf), axis=-1, keepdims=True)
+        q_s = jnp.maximum(q_amax, 1e-8) / 127.0
+        q_i8 = jnp.clip(jnp.round(qf / q_s), -127, 127).astype(jnp.int8)
+        logits_i = jnp.einsum("bkgd,bksd->bkgs", q_i8, k_cache,
+                              preferred_element_type=jnp.int32)
+        k_s = k_scale[:, :, None, :]  # (b,kvh,1,s) — layout-native, no transpose
+        logits = logits_i.astype(jnp.float32) * (q_s * k_s)
+        if length is not None:
+            valid = jnp.arange(s_len)[None, :] < length[:, None]
+            logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        # fold v_scale into probs, re-quantize the folded probs per row
+        v_s = v_scale[:, :, None, :]
+        pf = probs * v_s
+        p_amax = jnp.max(jnp.abs(pf), axis=-1, keepdims=True)
+        p_s = jnp.maximum(p_amax, 1e-12) / 127.0
+        p_i8 = jnp.clip(jnp.round(pf / p_s), -127, 127).astype(jnp.int8)
+        out_i = jnp.einsum("bkgs,bksd->bkgd", p_i8, v_cache,
+                           preferred_element_type=jnp.int32)
+        out = out_i.astype(jnp.float32) * p_s
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+
+    if mode == "fold" and k_scale is not None:
+        # iteration 1 (kept for A/B): scale folded out of the contraction,
+        # cache still converted to f32 (bytes unchanged — refuted hypothesis)
+        logits = jnp.einsum("bkgd,bksd->bkgs", qf,
+                            k_cache.astype(jnp.float32))
+        logits = logits * k_scale[:, :, None, :]
+    else:
+        kf = k_cache.astype(jnp.float32)
+        if k_scale is not None:
+            kf = kf * k_scale[..., None]
+        logits = jnp.einsum("bkgd,bksd->bkgs", qf, kf)
+
+    if length is not None:
+        valid = jnp.arange(s_len)[None, :] < length[:, None]
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if mode == "fold" and v_scale is not None:
+        pscaled = probs * v_scale[:, :, None, :]
+        out = jnp.einsum("bkgs,bksd->bkgd", pscaled,
+                         v_cache.astype(jnp.float32))
+    else:
+        vf = v_cache.astype(jnp.float32)
+        if v_scale is not None:
+            vf = vf * v_scale[..., None]
+        out = jnp.einsum("bkgs,bksd->bkgd", probs, vf)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

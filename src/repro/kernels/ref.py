@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: small, obvious implementations with
+no tiling, used by the test suite (`tests/test_kernel_*.py`) to check the
+Pallas kernels (run in interpret mode on CPU) over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+
+Array = jax.Array
+
+
+def abq_matmul_ref(
+    x_q: Array,
+    x_scale: Array,
+    planes: Array,
+    w_scale: Array,
+    w_zp: Array,
+    k: int,
+    out_dtype=jnp.bfloat16,
+) -> Array:
+    """Arbitrary-bit integer GEMM, weight-side bit-plane decomposition.
+
+    x_q:     int8 [M, K] symmetric per-token container values.
+    x_scale: f32 [M, 1] per-token activation scales.
+    planes:  uint32 [P, Kp/32, N] packed weight bit-planes.
+    w_scale: f32 [1, N] per-out-channel weight scale.
+    w_zp:    f32 [1, N] per-out-channel zero point (unsigned-grid).
+    k:       unpadded contraction length.
+
+    Y = x_scale * w_scale * (sum_s 2^s (x_q @ W^s) - zp * rowsum(x_q))
+    """
+    n_planes = planes.shape[0]
+    w_bits = bitplane.unpack_bitplanes(planes, k, dtype=jnp.int8)  # [P, K, N]
+    xi = x_q.astype(jnp.int32)
+    acc = jnp.zeros((x_q.shape[0], planes.shape[-1]), jnp.int32)
+    for s in range(n_planes):
+        part = jax.lax.dot_general(
+            xi,
+            w_bits[s].astype(jnp.int32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + (part << s)
+    rowsum = jnp.sum(xi, axis=1, keepdims=True)
+    out = x_scale * (w_scale * (acc.astype(jnp.float32) - w_zp * rowsum))
+    return out.astype(out_dtype)
+
+
+def abq_matmul_grouped_ref(
+    x_q: Array,
+    x_scale: Array,
+    planes: Array,
+    w_scale: Array,
+    w_zp: Array,
+    k: int,
+    group_size: int,
+    out_dtype=jnp.bfloat16,
+) -> Array:
+    """Per-group (g128) variant: scale/zp are (K/gs, 1, N)."""
+    n_groups = k // group_size
+    w_bits = bitplane.unpack_bitplanes(planes, k, dtype=jnp.int8)
+    xi = x_q.astype(jnp.int32)
+    m = x_q.shape[0]
+    n = planes.shape[-1]
+    out = jnp.zeros((m, n), jnp.float32)
+    for g in range(n_groups):
+        sl = slice(g * group_size, (g + 1) * group_size)
+        acc = jnp.zeros((m, n), jnp.int32)
+        for s in range(planes.shape[0]):
+            part = jax.lax.dot_general(
+                xi[:, sl],
+                w_bits[s][sl].astype(jnp.int32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            acc = acc + (part << s)
+        rs = jnp.sum(xi[:, sl], axis=1, keepdims=True)
+        out = out + w_scale[g] * (acc.astype(jnp.float32) - w_zp[g] * rs)
+    return (x_scale * out).astype(out_dtype)
+
+
+def act_quant_ref(x: Array, qmax: float = 127.0) -> tuple[Array, Array]:
+    """Per-token symmetric quantization: returns (int8 values, f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def flash_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> Array:
+    """Reference attention. q: [B, Sq, H, D]; k/v: [B, Skv, KVH, D].
+
+    GQA: H % KVH == 0, query head h uses kv head h // (H // KVH).
+    ``q_offset``: absolute position of q[0] (for decode: Skv - Sq).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(skv)[None, :]
+        mask = qi >= ki
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,78 @@
+"""Auto Kernel Search for the ABQ GEMM (the paper's Appendix D, TPU form).
+
+On GPU the paper benchmarks candidate (BM, BN, BK, warp layout) tiles and
+keeps the fastest. Without wall-clock on this container, the TPU version
+ranks candidates with the v5e roofline cost model (HBM stream vs MXU time,
+double-buffered) under the VMEM budget; on real TPU the same search loop
+plugs a wall-clock ``measure`` callable in place of the model.
+
+Used by `benchmarks/bench_kernel_ablation.py` (Table 4 analogue) and
+available to `abq_matmul_pallas` callers for block selection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional
+
+HBM_BW = 819e9
+INT8_PEAK = 394e12
+VMEM_BYTES = 128 * 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCandidate:
+    block_m: int
+    block_n: int
+    block_k: int
+    t_us: float
+    hbm_bytes: float
+    vmem_bytes: float
+
+
+def model_cost(m: int, k: int, n: int, *, w_bits: int, packed: bool = True,
+               overlap: bool = True, bm: int = 128, bn: int = 128,
+               bk: int = 512) -> dict:
+    """HBM traffic + MXU time for one tiled bit-plane GEMM invocation."""
+    m_eff = max(m, 8)
+    planes = w_bits if packed else 8
+    passes = max(m_eff // bm, 1)  # weight tiles re-streamed per M pass
+    w_bytes = passes * (planes * k * n / 8)
+    a_bytes = (n // max(bn, 1)) * (m_eff * k)  # act tile re-read per N block
+    o_bytes = 2 * m_eff * n
+    total_bytes = w_bytes + a_bytes + o_bytes
+    ops = 2.0 * m_eff * k * n * planes
+    t_mem = total_bytes / HBM_BW
+    t_cmp = ops / INT8_PEAK
+    t = max(t_mem, t_cmp) if overlap else t_mem + t_cmp
+    vmem = bm * bk + bk * bn + 4 * bm * bn + planes * bk * bn / 8
+    return {"t_us": t * 1e6, "bytes": total_bytes, "vmem": vmem}
+
+
+def auto_tune(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    w_bits: int,
+    measure: Optional[Callable[[int, int, int], float]] = None,
+    vmem_budget: int = VMEM_BYTES // 4,  # double-buffering headroom
+) -> KernelCandidate:
+    """Pick (BM, BN, BK) minimizing modeled (or measured) time."""
+    best: Optional[KernelCandidate] = None
+    for bm, bn, bk in itertools.product(
+        (8, 16, 32, 64, 128, 256), (128, 256, 512), (128, 256, 512, 1024, 2048)
+    ):
+        if bk > k or bn > n or bk % 32:
+            continue
+        r = model_cost(m, k, n, w_bits=w_bits, bm=bm, bn=bn, bk=bk)
+        if r["vmem"] > vmem_budget:
+            continue
+        t = measure(bm, bn, bk) if measure is not None else r["t_us"]
+        cand = KernelCandidate(bm, bn, bk, t, r["bytes"], r["vmem"])
+        if best is None or cand.t_us < best.t_us:
+            best = cand
+    if best is None:
+        raise ValueError(f"no feasible block config for ({m},{k},{n})")
+    return best

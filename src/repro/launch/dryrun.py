@@ -1,0 +1,495 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent at production
+scale without real hardware: 512 host-platform placeholder devices stand in
+for 2 TPU v5e pods; every cell must .lower().compile() under GSPMD, and the
+compiled artifact yields the memory/cost/collective numbers §Roofline reads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2-pod mesh only
+  ... --out benchmarks/results/dryrun.json
+"""
+
+# The VERY FIRST lines: jax locks the device count on first init, so the
+# placeholder-device flag must be set before ANY other import pulls in jax.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import optim  # noqa: E402
+from repro.configs import (  # noqa: E402
+    ARCH_NAMES,
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    cell_is_runnable,
+    get_config,
+)
+from repro.dist.sharding import ShardingRules, axis_size  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.models.blocks import ModelContext  # noqa: E402
+from repro.models.quantized import QuantizeConfig, quantize_model  # noqa: E402
+from repro.models.shardings import (  # noqa: E402
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+)
+
+# per-arch training knobs at production scale (DESIGN.md §4)
+_TRAIN_MICROBATCHES = {"grok-1-314b": 8, "llama-3.2-vision-90b": 4,
+                       "qwen2-moe-a2.7b": 2}
+_BF16_MOMENTS = {"grok-1-314b", "llama-3.2-vision-90b"}
+
+# serve-path quantization for the dry-run: the paper's flagship W2*A8
+_SERVE_QCFG = QuantizeConfig(w_bits=2, a_bits=8, bit_balance=True,
+                             tensor_par=16)
+
+
+def _sds(tree, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def rules_for(shape: ShapeConfig, mesh: Mesh) -> ShardingRules:
+    rules = ShardingRules()
+    if shape.kind in ("prefill", "decode") \
+            and os.environ.get("REPRO_SERVE_FSDP", "0") != "1":
+        # §Perf iteration 4 (serve sharding): weights tensor-parallel ONLY.
+        # With fsdp-sharded weights the serve path contracts activations
+        # against K-sharded weights and all-reduces int32 partials (measured:
+        # 3×5.4 GB per projection on qwen3 prefill — the dominant collective).
+        # TP-only weights fit per chip at serve time (largest: grok W2*A8
+        # 118 GB/16 = 7.4 GB) and eliminate those collectives entirely.
+        # REPRO_SERVE_FSDP=1 restores the baseline for A/B.
+        rules = dataclasses.replace(rules, fsdp=None)
+    dp = axis_size(mesh, rules.resolve(mesh).batch)
+    if shape.global_batch % max(dp, 1) != 0:
+        rules = dataclasses.replace(rules, batch=None)  # e.g. long_500k B=1
+    return rules.resolve(mesh)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.family == "audio" else (b, s)
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len cache
+    tok = (b, 1, cfg.n_codebooks) if cfg.family == "audio" else (b, 1)
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    return {"tokens": jax.ShapeDtypeStruct(tok, jnp.int32), "cache": cache}
+
+
+def probe_plan(cfg: ArchConfig) -> dict:
+    """Depth schedule for the unrolled roofline probes.
+
+    cost_analysis counts while-loop bodies once, so the full-depth compile
+    under-reports FLOPs/bytes. Probes compile two reduced depths with EVERY
+    scan unrolled; cost is exactly linear in the depth unit (identical
+    layers), so total(g_real) = c(g1) + slope·(g_real−g1) is exact.
+    """
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        rem = cfg.n_layers % every
+        return {"unit": "group", "gs": (1, 2),
+                "layers": (every + rem, 2 * every + rem),
+                "g_real": cfg.n_layers // every}
+    if cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        return {"unit": "group", "gs": (1, 2),
+                "layers": (every, 2 * every),
+                "g_real": cfg.n_layers // every}
+    return {"unit": "layer", "gs": (2, 4), "layers": (2, 4),
+            "g_real": cfg.n_layers}
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               depth_override: Optional[int] = None,
+               batch_override: Optional[int] = None,
+               probe: bool = False):
+    """Returns (jitted_fn, arg_structs) for one cell."""
+    shape = SHAPES[shape_name]
+    if batch_override:
+        shape = dataclasses.replace(shape, global_batch=batch_override)
+    tensor_par = axis_size(mesh, "model")
+    cfg = get_config(arch)
+    if depth_override:
+        cfg = dataclasses.replace(cfg, n_layers=depth_override)
+    cfg = cfg.with_kv_replication(tensor_par)
+    rules = rules_for(shape, mesh)
+    ctx = ModelContext(cfg=cfg, mesh=mesh, rules=rules, backend="xla",
+                       remat=(shape.kind == "train"),
+                       unroll=probe, flash_block=4096 if probe else 1024)
+
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+    params_sp = param_pspecs(params_s, cfg, rules, mesh)
+    params_sds = _sds(params_s, params_sp, mesh)
+
+    if shape.kind == "train":
+        from repro.launch.train import TrainConfig, make_train_step
+
+        tcfg = TrainConfig(
+            steps=10_000, global_batch=shape.global_batch,
+            seq_len=shape.seq_len,
+            microbatches=_TRAIN_MICROBATCHES.get(arch, 1),
+            moment_dtype="bfloat16" if arch in _BF16_MOMENTS else None,
+        )
+        opt_cfg = optim.AdamWConfig(
+            lr=3e-4, moment_dtype=tcfg.moment_dtype, grad_clip_norm=1.0)
+        step_fn = make_train_step(cfg, tcfg, ctx, opt_cfg)
+        opt_s = jax.eval_shape(lambda p: optim.init(p, opt_cfg), params_s)
+        opt_sp = {
+            "m": param_pspecs(opt_s["m"], cfg, rules, mesh),
+            "v": param_pspecs(opt_s["v"], cfg, rules, mesh),
+            "step": P(),
+        }
+        opt_sds = _sds(opt_s, opt_sp, mesh)
+        batch_s = input_specs(cfg, shape)
+        batch_sds = _sds(batch_s, batch_pspecs(batch_s, rules, mesh), mesh)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                        sharding=NamedSharding(mesh, P()))
+
+        fn = jax.jit(
+            lambda p, o, b, st: step_fn(p, o, {}, b, st),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_sds, opt_sds, batch_sds, step_sds)
+
+    # serve cells run the ABQ-quantized model
+    qparams_s = jax.eval_shape(
+        lambda p: quantize_model(p, cfg, _SERVE_QCFG), params_s)
+    qparams_sp = param_pspecs(qparams_s, cfg, rules, mesh)
+    qparams_sds = _sds(qparams_s, qparams_sp, mesh)
+
+    if shape.kind == "prefill":
+        batch_s = input_specs(cfg, shape)
+        batch_sds = _sds(batch_s, batch_pspecs(batch_s, rules, mesh), mesh)
+
+        def prefill_fn(qp, batch):
+            return lm.prefill(qp, batch["tokens"], cfg, ctx,
+                              max_len=shape.seq_len,
+                              image_embeds=batch.get("image_embeds"))
+
+        return jax.jit(prefill_fn), (qparams_sds, batch_sds)
+
+    # decode
+    specs = input_specs(cfg, shape)
+    cache_sp = cache_pspecs(specs["cache"], cfg, rules, mesh)
+    cache_sds = _sds(specs["cache"], cache_sp, mesh)
+    tok_sds = _sds(specs["tokens"],
+                   batch_pspecs({"t": specs["tokens"]}, rules, mesh)["t"],
+                   mesh)
+
+    def decode_fn(qp, cache, tokens):
+        return lm.decode_step(qp, cache, tokens, cfg, ctx)
+
+    return jax.jit(decode_fn, donate_argnums=(1,)), (qparams_sds, cache_sds,
+                                                     tok_sds)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[64,128]{1,0}' -> bytes. Returns 0 for unparsable/token types."""
+    import re
+
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device output bytes of every collective op in the compiled
+    (post-SPMD-partitioning) module, by collective kind."""
+    import re
+
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        ret_type, opname = m.group(1), m.group(2)
+        base = opname.replace("-start", "")
+        if base not in _COLLECTIVES:
+            continue
+        if opname.endswith("-done"):
+            continue
+        # return type may be a tuple: (bf16[...], bf16[...])
+        types = re.findall(r"[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?", ret_type)
+        out[base] += sum(_shape_bytes(t) for t in types)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def tpu_artifact_bytes(hlo_text: str, min_bytes: int = 32 * 2**20,
+                       decode: bool = False) -> float:
+    """Bytes in the compiled-for-CPU module that a TPU execution does not
+    pay, so §Roofline can subtract them (conservatively: output-writes only):
+
+      A. ``convert`` ops reading s8 -> s32/f32 (XLA:CPU materializes int8 dot
+         operands as int32; the TPU MXU consumes int8 natively);
+      B. big s8/s32 ``copy``/``concatenate``/``slice``/``dynamic-update-slice``
+         (unrolled-scan cache threading — buffer donation + in-place DUS
+         elide these on TPU; the real write is one token);
+      C. ``fusion`` ops producing s32 tensors at cache scale (the fused form
+         of A).
+
+    Only ops >= min_bytes count (small converts are real epilogue work).
+    """
+    import re
+
+    total = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s+"
+                     r"([\w\-]+)\((.*)$", ls)
+        if not m:
+            continue
+        ret, op, operands = m.group(1), m.group(2), m.group(3)
+        types = re.findall(r"[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?", ret)
+        out_b = sum(_shape_bytes(t) for t in types)
+        if out_b < min_bytes:
+            continue
+        if op == "convert" and ret.lstrip().startswith(("s32", "f32")) \
+                and "s8[" in operands:
+            total += out_b
+        elif op in ("copy", "concatenate", "slice", "dynamic-update-slice") \
+                and ret.lstrip().startswith(("s8", "s32")):
+            total += out_b
+        elif op == "fusion" and ret.lstrip().startswith("s32"):
+            total += out_b
+        elif decode and op == "fusion" and ret.lstrip().startswith("s8"):
+            # decode-only: big s8 fusions are cache-threading writes (the
+            # real write is one token); prefill s8 fusions are the genuine
+            # KV-quantization output and stay counted
+            total += out_b
+    return total
+
+
+def run_probe(arch: str, shape_name: str, mesh: Mesh) -> dict:
+    """Two reduced-depth fully-unrolled compiles -> exact per-depth-unit
+    slopes for flops/bytes/collectives (see probe_plan docstring)."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    plan = probe_plan(cfg)
+    dp = axis_size(mesh, rules_for(shape, mesh).batch) or 1
+    mb = _TRAIN_MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1
+    unit = dp * mb  # smallest batch divisible by dp AND the microbatch count
+    b_probe = None
+    if shape.global_batch > unit and shape.global_batch % unit == 0:
+        b_probe = unit  # per-device cost is exactly linear in local batch
+    out = {"unit": plan["unit"], "gs": list(plan["gs"]),
+           "g_real": plan["g_real"],
+           "batch_probe": b_probe or shape.global_batch,
+           "batch_real": shape.global_batch,
+           "flops": [], "bytes": [], "coll": [], "artifact_bytes": [],
+           "compile_s": []}
+    for depth in plan["layers"]:
+        t0 = time.time()
+        fn, arg_sds = build_cell(arch, shape_name, mesh,
+                                 depth_override=depth,
+                                 batch_override=b_probe, probe=True)
+        with mesh:
+            compiled = fn.lower(*arg_sds).compile()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        coll = collective_bytes(txt)
+        out["flops"].append(float(cost.get("flops", 0.0)))
+        out["bytes"].append(float(cost.get("bytes accessed", 0.0)))
+        out["coll"].append(float(sum(coll.values())))
+        out["artifact_bytes"].append(
+            tpu_artifact_bytes(txt, decode=(shape.kind == "decode")))
+        out["compile_s"].append(round(time.time() - t0, 1))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh: Mesh, *,
+             text_dir: Optional[str] = None, probes: bool = False) -> dict:
+    t0 = time.time()
+    fn, arg_sds = build_cell(arch, shape_name, mesh)
+    with mesh:
+        lowered = fn.lower(*arg_sds)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    if text_dir:
+        os.makedirs(text_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh.devices.size}.hlo"
+        with open(os.path.join(text_dir, fname), "w") as f:
+            f.write(txt)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(np.asarray(mesh.devices).shape),
+        "n_devices": int(mesh.devices.size),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "compile_seconds": round(time.time() - t0, 1),
+        "status": "ok",
+    }
+    if probes:
+        rec["probe"] = run_probe(arch, shape_name, mesh)
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="one arch (default: all)")
+    p.add_argument("--shape", default=None, help="one shape (default: all)")
+    p.add_argument("--multi-pod", action="store_true",
+                   help="only the 2-pod mesh (default: both meshes)")
+    p.add_argument("--single-pod", action="store_true")
+    p.add_argument("--out", default="benchmarks/results/dryrun.json")
+    p.add_argument("--hlo-dir", default=None,
+                   help="dump per-cell compiled HLO text here")
+    p.add_argument("--probes", action="store_true",
+                   help="also run unrolled reduced-depth probes per cell "
+                        "(exact roofline totals; single-pod recommended)")
+    p.add_argument("--probes-only", action="store_true",
+                   help="run ONLY the probes (full-cell numbers come from a "
+                        "prior dryrun.json; merged by benchmarks.roofline)")
+    p.add_argument("--include-llama", action="store_true",
+                   help="also run the paper's llama-7b config")
+    args = p.parse_args(argv)
+
+    meshes = []
+    if not args.multi_pod:
+        meshes.append(make_production_mesh(multi_pod=False))
+    if not args.single_pod:
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    archs = [args.arch] if args.arch else [
+        a for a in ARCH_NAMES if a != "llama-7b" or args.include_llama
+    ]
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    results = []
+    for mesh in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                runnable, why = cell_is_runnable(cfg, SHAPES[shape_name])
+                tag = f"{arch} × {shape_name} × {mesh.devices.size}d"
+                if not runnable:
+                    print(f"[dryrun] SKIP {tag}: {why}", flush=True)
+                    results.append({"arch": arch, "shape": shape_name,
+                                    "n_devices": int(mesh.devices.size),
+                                    "status": why})
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    if args.probes_only:
+                        t0 = time.time()
+                        rec = {"arch": arch, "shape": shape_name,
+                               "n_devices": int(mesh.devices.size),
+                               "status": "ok",
+                               "probe": run_probe(arch, shape_name, mesh)}
+                        print(f"[dryrun] PROBE {tag}: "
+                              f"{rec['probe']['compile_s']}s", flush=True)
+                    else:
+                        rec = run_cell(arch, shape_name, mesh,
+                                       text_dir=args.hlo_dir,
+                                       probes=args.probes)
+                        print(f"[dryrun] OK  {tag}: "
+                              f"flops/dev={rec['flops_per_device']:.3e} "
+                              f"bytes/dev={rec['bytes_per_device']:.3e} "
+                              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                              f"args={rec['memory']['argument_bytes']/2**30:.2f}GiB "
+                              f"({rec['compile_seconds']}s)", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name,
+                           "n_devices": int(mesh.devices.size),
+                           "status": f"FAILED: {e}"}
+                    print(f"[dryrun] FAIL {tag}: {e}", flush=True)
+                results.append(rec)
+                # incremental write so long probe runs are resumable/partial
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_fail = sum(1 for r in results
+                 if str(r.get("status", "")).startswith("FAILED"))
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, "
+          f"{len(results) - n_ok - n_fail} skipped -> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

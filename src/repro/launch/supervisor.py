@@ -1,0 +1,47 @@
+"""Fault-tolerant training supervisor: run → crash → restore → continue.
+
+On a real fleet this is the role of the cluster-level controller (Borg/K8s
+restart policy + the job's own resume logic). Here the supervisor drives
+``repro.launch.train.run`` in-process: any exception (including the
+``--fail-at-step`` injected crash used by the tests) triggers a resume from
+the latest complete checkpoint, up to ``max_restarts``. Because the data
+pipeline is (seed, step)-deterministic and checkpoints are atomic, the
+post-restart loss trajectory is identical to an uninterrupted run.
+"""
+
+from __future__ import annotations
+
+import traceback
+from typing import Optional
+
+from repro.launch import train as train_mod
+
+
+def supervise(argv: list[str], *, max_restarts: int = 3) -> dict:
+    attempts = 0
+    base_argv = [a for a in argv]
+    while True:
+        try:
+            resume_argv = base_argv + (["--resume"] if attempts else [])
+            result = train_mod.run(resume_argv)
+            result["restarts"] = attempts
+            return result
+        except Exception as e:  # noqa: BLE001 — any failure triggers restart
+            attempts += 1
+            print(f"[supervisor] run failed ({e!r}); "
+                  f"restart {attempts}/{max_restarts}")
+            traceback.print_exc()
+            if attempts > max_restarts:
+                raise
+            # injected-failure flags only apply to the first attempt
+            base_argv = [
+                a for i, a in enumerate(base_argv)
+                if not (a == "--fail-at-step"
+                        or (i > 0 and base_argv[i - 1] == "--fail-at-step"))
+            ]
+
+
+if __name__ == "__main__":
+    import sys
+
+    supervise(sys.argv[1:])

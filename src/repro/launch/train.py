@@ -1,0 +1,243 @@
+"""Distributed training driver.
+
+`make_train_step` builds the jit'd step for a (cfg, mesh, rules) triple:
+  * remat'd loss (models/lm.py), microbatch gradient accumulation via
+    lax.scan when cfg asks for it,
+  * AdamW with dtype-configurable moments (bf16 at ≥90B — DESIGN.md §4),
+  * optional int8 error-feedback gradient compression across the pod axis
+    (dist/compression.py) for the replicated-across-pods regime.
+
+`run` is the CLI entry (python -m repro.launch.train --arch ... --steps ...)
+used by examples and the fault-tolerance supervisor; it wires the
+deterministic data pipeline, async checkpointing, straggler detection, and
+resume-from-latest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import ArchConfig, get_config, get_smoke_config
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.dist import compression
+from repro.dist.sharding import ShardingRules
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from repro.models.shardings import batch_pspecs, param_pspecs
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    warmup: int = 20
+    microbatches: int = 1  # >1: lax.scan gradient accumulation
+    moment_dtype: Optional[str] = None  # "bfloat16" at very large scale
+    grad_clip: float = 1.0
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_every: int = 50
+    grad_compression: bool = False  # int8 EF all-reduce across "pod"
+    seed: int = 0
+    n_loss_chunks: int = 8
+    straggler_factor: float = 3.0  # step slower than factor×median -> flag
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, ctx: ModelContext,
+                    opt_cfg: optim.AdamWConfig):
+    """Returns jit-able fn(params, opt_state, batch, step) -> (params, opt,
+    metrics)."""
+
+    def loss_of(params, batch):
+        loss, metrics = lm.loss_fn(params, batch, cfg, ctx,
+                                   n_loss_chunks=tcfg.n_loss_chunks)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        mb = tcfg.microbatches
+
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape((mb, b // mb) + x.shape[1:])
+
+        batches = jax.tree.map(reshape, batch)
+
+        def body(carry, mbatch):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(body, (zero, jnp.zeros(())),
+                                           batches, unroll=ctx.unroll)
+        grads = jax.tree.map(lambda g: (g / mb).astype(jnp.float32), gsum)
+        loss = loss_sum / mb
+        return loss, {"loss": loss}, grads
+
+    def step_fn(params, opt_state, err_state, batch, step):
+        loss, metrics, grads = compute_grads(params, batch)
+        if tcfg.grad_compression and ctx.mesh is not None \
+                and "pod" in ctx.mesh.axis_names:
+            grads, err_state = compression.compressed_pmean(
+                grads, err_state, ctx.mesh, ("pod",))
+        lr = optim.cosine_with_warmup(
+            step, base_lr=tcfg.lr, warmup=tcfg.warmup, total=tcfg.steps)
+        new_params, new_opt = optim.update(
+            grads, opt_state, params, opt_cfg, lr_scale=lr / opt_cfg.lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = optim.global_norm(grads)
+        metrics["lr"] = lr
+        return new_params, new_opt, err_state, metrics
+
+    return step_fn
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    err_state: Any
+    step: int
+
+
+def init_state(key, cfg: ArchConfig, tcfg: TrainConfig,
+               opt_cfg: optim.AdamWConfig) -> TrainState:
+    params = lm.init_params(key, cfg)
+    opt_state = optim.init(params, opt_cfg)
+    err_state = (compression.init_error_state(params)
+                 if tcfg.grad_compression else {})
+    return TrainState(params, opt_state, err_state, 0)
+
+
+class StragglerWatch:
+    """Flags steps slower than factor × running median (per-host analogue of
+    fleet-level straggler detection; on real pods this feeds the scheduler
+    which re-slices the data feed away from the slow host)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.window = window
+        self.times: list[float] = []
+        self.flagged: list[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        slow = False
+        if len(self.times) >= 5:
+            med = float(np.median(self.times[-self.window:]))
+            slow = dt > self.factor * med
+        self.times.append(dt)
+        if slow:
+            self.flagged.append(step)
+        return slow
+
+
+def run(argv: Optional[list[str]] = None) -> dict:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama-7b")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced smoke config (CPU-sized)")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    p.add_argument("--checkpoint-every", type=int, default=25)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--data", type=int, default=1, help="data mesh axis")
+    p.add_argument("--model", type=int, default=1, help="model mesh axis")
+    p.add_argument("--fail-at-step", type=int, default=-1,
+                   help="inject a crash at this step (fault-tolerance test)")
+    p.add_argument("--grad-compression", action="store_true")
+    args = p.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(
+        steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, lr=args.lr, microbatches=args.microbatches,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        grad_compression=args.grad_compression,
+    )
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(args.data, args.model)
+    rules = ShardingRules().resolve(mesh)
+    ctx = ModelContext(cfg=cfg, mesh=mesh if mesh.size > 1 else None,
+                       rules=rules, remat=True)
+    opt_cfg = optim.AdamWConfig(lr=tcfg.lr, weight_decay=0.0,
+                                moment_dtype=tcfg.moment_dtype,
+                                grad_clip_norm=tcfg.grad_clip)
+
+    state = init_state(jax.random.PRNGKey(tcfg.seed), cfg, tcfg, opt_cfg)
+    start = 0
+    if args.resume:
+        last = ckpt.latest_step(tcfg.checkpoint_dir)
+        if last is not None:
+            tree = {"params": state.params, "opt": state.opt_state}
+            restored = ckpt.restore_like(tcfg.checkpoint_dir, last, tree)
+            state = TrainState(restored["params"], restored["opt"],
+                               state.err_state, last)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    step_fn = make_train_step(cfg, tcfg, ctx, opt_cfg)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+    ds = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+        n_codebooks=cfg.n_codebooks))
+    saver = ckpt.AsyncCheckpointer(tcfg.checkpoint_dir)
+    watch = StragglerWatch(tcfg.straggler_factor)
+    params, opt_state, err_state = state.params, state.opt_state, state.err_state
+    losses = []
+    for step in range(start, tcfg.steps):
+        if step == args.fail_at_step:
+            raise RuntimeError(f"[injected failure] at step {step}")
+        batch_np = ds.batch(step, tcfg.global_batch)
+        if cfg.family == "vlm":
+            rng = np.random.default_rng(step)
+            batch_np["image_embeds"] = rng.normal(
+                size=(tcfg.global_batch, cfg.n_image_tokens, cfg.d_model)
+            ).astype(np.float32) * 0.02
+        batch = jax.tree.map(jnp.asarray, batch_np)
+        t0 = time.time()
+        params, opt_state, err_state, metrics = jit_step(
+            params, opt_state, err_state, batch, jnp.asarray(step))
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        slow = watch.record(step, dt)
+        losses.append(loss)
+        if step % 10 == 0 or step == tcfg.steps - 1:
+            print(f"[train] step={step} loss={loss:.4f} dt={dt*1e3:.0f}ms"
+                  + (" STRAGGLER" if slow else ""))
+        if (step + 1) % tcfg.checkpoint_every == 0 or step == tcfg.steps - 1:
+            saver.save(step + 1, {"params": params, "opt": opt_state})
+    saver.wait()
+    return {"final_loss": losses[-1] if losses else None,
+            "losses": losses, "straggler_steps": watch.flagged}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,1 @@
+"""Model zoo: layers, attention, SSM, MoE, blocks, LM drivers."""

@@ -1,0 +1,251 @@
+"""GQA self-attention and cross-attention with an int8-quantized KV cache.
+
+Three entry points used by the blocks:
+  attend_train   — flash attention over the whole sequence (train/prefill)
+  attend_decode  — one token against the quantized cache
+  cross_attend   — attention over (stubbed) image/context embeddings
+
+The KV cache is the paper's regime: per-token-per-head symmetric int8
+(§4.1 "for activation and KV Cache we perform per-token quantization"),
+so decode reads ~half the bytes of a bf16 cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.layers import apply_linear, apply_rope, rms_norm
+
+Array = jax.Array
+
+
+def init_attn_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    from repro.models.layers import dense_init
+
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions, *, backend, interpret,
+                 rope: bool = True, shard=None):
+    b, s, _ = x.shape
+    sh = shard or (lambda t, *l: t)
+    hd = cfg.resolved_head_dim
+    q = apply_linear(x, params["wq"], backend=backend, interpret=interpret)
+    k = apply_linear(x, params["wk"], backend=backend, interpret=interpret)
+    v = apply_linear(x, params["wv"], backend=backend, interpret=interpret)
+    # heads ride the tensor axis from here to the output projection
+    q = sh(q.reshape(b, s, cfg.n_heads, hd), "batch", None, "tensor", None)
+    k = sh(k.reshape(b, s, cfg.n_kv_heads, hd), "batch", None, "tensor", None)
+    v = sh(v.reshape(b, s, cfg.n_kv_heads, hd), "batch", None, "tensor", None)
+    if cfg.qk_norm:
+        q = sh(rms_norm(q, params["q_norm"], cfg.norm_eps),
+               "batch", None, "tensor", None)
+        k = sh(rms_norm(k, params["k_norm"], cfg.norm_eps),
+               "batch", None, "tensor", None)
+    if rope:
+        q = sh(apply_rope(q, positions, cfg.rope_theta),
+               "batch", None, "tensor", None)
+        k = sh(apply_rope(k, positions, cfg.rope_theta),
+               "batch", None, "tensor", None)
+    return q, k, v
+
+
+def attend_train(
+    params: dict,
+    x: Array,
+    cfg: ArchConfig,
+    *,
+    positions: Optional[Array] = None,
+    backend: str = "auto",
+    interpret: bool = False,
+    shard=None,
+    unroll: bool = False,
+    flash_block: int = 1024,
+) -> Array:
+    """Full-sequence causal attention; returns (B, S, D)."""
+    b, s, _ = x.shape
+    sh = shard or (lambda t, *l: t)
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(
+        params, x, cfg, positions, backend=backend, interpret=interpret,
+        shard=shard,
+    )
+    out = kops.flash_attention(q, k, v, causal=True, backend=backend,
+                               interpret=interpret, unroll=unroll,
+                               block_q=flash_block, block_k=flash_block)
+    out = sh(out, "batch", None, "tensor", None)
+    out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    return apply_linear(out, params["wo"], backend=backend, interpret=interpret)
+
+
+def quantize_kv(k: Array, v: Array) -> tuple[Array, Array, Array, Array]:
+    """(B,S,KVH,D) -> int8 values + f32 per-token-per-head scales."""
+    def one(t):
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+        return q.astype(jnp.int8), scale
+
+    kq, ks = one(k)
+    vq, vs = one(v)
+    return kq, ks, vq, vs
+
+
+def quantize_kv_cached(k: Array, v: Array):
+    """(B,S,KVH,D) -> cache-layout int8 KV: values (B,KVH,S,D), scales
+    (B,KVH,S). §Perf iteration 3: the cache is stored in the layout the
+    decode contraction consumes, so no per-step transpose of the (huge)
+    cache — the one transpose happens here, at prefill, amortized over the
+    whole decode."""
+    kq, ks, vq, vs = quantize_kv(k, v)
+    return (kq.transpose(0, 2, 1, 3), ks[..., 0].transpose(0, 2, 1),
+            vq.transpose(0, 2, 1, 3), vs[..., 0].transpose(0, 2, 1))
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None) -> dict:
+    """Stacked attention-native layout: values (L, B, KVH, S, D) int8,
+    scales (L, B, KVH, S) fp32."""
+    hd = cfg.resolved_head_dim
+    kvh = cfg.n_kv_heads
+    ell = cfg.n_layers if n_layers is None else n_layers
+    return {
+        "k": jnp.zeros((ell, batch, kvh, max_len, hd), jnp.int8),
+        "k_scale": jnp.zeros((ell, batch, kvh, max_len), jnp.float32),
+        "v": jnp.zeros((ell, batch, kvh, max_len, hd), jnp.int8),
+        "v_scale": jnp.zeros((ell, batch, kvh, max_len), jnp.float32),
+    }
+
+
+def attend_prefill(
+    params: dict,
+    x: Array,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+    shard=None,
+    unroll: bool = False,
+    flash_block: int = 1024,
+):
+    """Like attend_train but also returns the quantized (k, ks, v, vs)."""
+    b, s, _ = x.shape
+    sh = shard or (lambda t, *l: t)
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(
+        params, x, cfg, positions, backend=backend, interpret=interpret,
+        shard=shard,
+    )
+    out = kops.flash_attention(q, k, v, causal=True, backend=backend,
+                               interpret=interpret, unroll=unroll,
+                               block_q=flash_block, block_k=flash_block)
+    out = sh(out, "batch", None, "tensor", None)
+    out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    out = apply_linear(out, params["wo"], backend=backend, interpret=interpret)
+    kq, ks, vq, vs = quantize_kv_cached(k, v)
+    return out, (kq, ks, vq, vs)
+
+
+def attend_decode(
+    params: dict,
+    x: Array,
+    layer_cache: dict,
+    pos: Array,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+    shard=None,
+):
+    """One-token step. x: (B, 1, D); layer_cache holds (B, KVH, S, D) int8
+    values + (B, KVH, S) scales (attention-native layout).
+
+    Returns (out, updated layer_cache). The new token's k/v are quantized and
+    written at ``pos`` (dynamic index); attention masks positions > pos.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(
+        params, x, cfg, positions, backend=backend, interpret=interpret,
+        shard=shard,
+    )
+    kq, ks, vq, vs = quantize_kv_cached(k, v)  # (B,KVH,1,D) / (B,KVH,1)
+
+    def write(cache, val, axis):
+        return jax.lax.dynamic_update_slice_in_dim(cache, val, pos, axis=axis)
+
+    new_cache = {
+        "k": write(layer_cache["k"], kq, 2),
+        "k_scale": write(layer_cache["k_scale"],
+                         ks.astype(layer_cache["k_scale"].dtype), 2),
+        "v": write(layer_cache["v"], vq, 2),
+        "v_scale": write(layer_cache["v_scale"],
+                         vs.astype(layer_cache["v_scale"].dtype), 2),
+    }
+    length = jnp.full((b,), pos + 1, jnp.int32)
+    out = kops.decode_attention(
+        q,
+        new_cache["k"],
+        new_cache["v"],
+        new_cache["k_scale"],
+        new_cache["v_scale"],
+        length=length,
+    )
+    out = out.reshape(b, 1, cfg.n_heads * cfg.resolved_head_dim)
+    out = apply_linear(out, params["wo"], backend=backend, interpret=interpret)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (VLM): queries from text stream, K/V from image embeddings
+# ---------------------------------------------------------------------------
+
+
+def cross_attend(
+    params: dict,
+    x: Array,
+    context: Array,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+    unroll: bool = False,
+    flash_block: int = 1024,
+) -> Array:
+    """x: (B, S, D) text; context: (B, T, D) image embeddings (stub frontend).
+    No RoPE (positions are cross-modal); non-causal over context."""
+    b, s, _ = x.shape
+    t = context.shape[1]
+    hd = cfg.resolved_head_dim
+    q = apply_linear(x, params["wq"], backend=backend, interpret=interpret)
+    k = apply_linear(context, params["wk"], backend=backend, interpret=interpret)
+    v = apply_linear(context, params["wv"], backend=backend, interpret=interpret)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    out = kops.flash_attention(q, k, v, causal=False, backend=backend,
+                               interpret=interpret, unroll=unroll,
+                               block_q=flash_block, block_k=flash_block)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return apply_linear(out, params["wo"], backend=backend, interpret=interpret)

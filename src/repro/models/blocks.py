@@ -1,0 +1,281 @@
+"""Transformer/Mamba/MoE/cross-attention blocks + the layer-stack drivers.
+
+Blocks are pure functions over a per-layer param dict. The LM (lm.py) stacks
+layer params on a leading axis and drives them with lax.scan (compile-time
+O(1) in depth — required for the 64–100 layer production configs), wrapping
+the body in jax.checkpoint for training remat.
+
+Every block exposes the two hooks the ABQ calibration needs (§3.2):
+  * the block output (for the DLC loss) — just the return value;
+  * the attention probabilities (for the AKL loss) — via ``return_attn``,
+    which switches attention to the reference (non-flash) path since the
+    whole point is to look at the map. Calibration runs on short sequences,
+    so the quadratic map is fine there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import ArchConfig
+from repro.dist.sharding import ShardingRules, constraint
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_linear,
+    apply_rope,
+    dense_init,
+    glu_mlp,
+    rms_norm,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    """Static execution context threaded through the model."""
+
+    cfg: ArchConfig
+    mesh: Optional[Mesh] = None
+    rules: ShardingRules = dataclasses.field(default_factory=ShardingRules)
+    backend: str = "auto"  # kernel dispatch: auto | xla | pallas
+    remat: bool = True
+    interpret: bool = False
+    # roofline-probe knobs: unroll every scan so cost_analysis counts true
+    # totals (used by dryrun --probe; see benchmarks/roofline.py)
+    unroll: bool = False
+    flash_block: int = 1024
+
+    @property
+    def kw(self):
+        return dict(backend=self.backend, interpret=self.interpret)
+
+    @property
+    def loop_kw(self):
+        return dict(unroll=self.unroll, flash_block=self.flash_block)
+
+    def shard(self, x: Array, *logical) -> Array:
+        return constraint(x, self.mesh, self.rules, *logical)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"w_gate": dense_init(ks[0], (d, ff), dtype),
+         "w_down": dense_init(ks[2], (ff, d), dtype)}
+    if cfg.act in ("silu", "gelu"):  # gated (SwiGLU / GeGLU)
+        p["w_up"] = dense_init(ks[1], (d, ff), dtype)
+    return p
+
+
+def init_dense_block(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn_params(ks[0], cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp_params(ks[1], cfg, dtype),
+    }
+
+
+def init_moe_block(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn_params(ks[0], cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "moe": moe_mod.init_moe_params(ks[1], cfg, dtype),
+    }
+
+
+def init_ssm_block(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm": ssm_mod.init_ssm_params(key, cfg, dtype),
+    }
+
+
+def init_cross_block(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    """Gated cross-attention layer (llama-3.2-vision style)."""
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_mod.init_attn_params(ks[0], cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp_params(ks[1], cfg, dtype),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward: full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attention_with_probs(params, x_ln, cfg: ArchConfig, ctx: ModelContext):
+    """Reference-path attention that also returns the probability map
+    (calibration-only; short sequences)."""
+    b, s, _ = x_ln.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = attn_mod._project_qkv(
+        params, x_ln, cfg, jnp.arange(s), rope=True, **ctx.kw
+    )
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) / (hd**0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    out = out.astype(x_ln.dtype).reshape(b, s, cfg.n_heads * hd)
+    out = apply_linear(out, params["wo"], **ctx.kw)
+    return out, probs
+
+
+def dense_block(
+    params: dict,
+    x: Array,
+    ctx: ModelContext,
+    *,
+    return_attn: bool = False,
+):
+    """Pre-norm attention + (Swi/Ge)GLU MLP block. Returns (y, attn_probs?)."""
+    cfg = ctx.cfg
+    x = ctx.shard(x, "batch", "seq", None)
+    h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+    probs = None
+    if return_attn:
+        a, probs = _attention_with_probs(params["attn"], h, cfg, ctx)
+    else:
+        a = attn_mod.attend_train(params["attn"], h, cfg, shard=ctx.shard,
+                                   **ctx.loop_kw, **ctx.kw)
+    x = x + ctx.shard(a, "batch", "seq", None)
+    h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)
+    m = glu_mlp(params["mlp"], h, cfg.act, shard=ctx.shard, **ctx.kw)
+    x = x + ctx.shard(m, "batch", "seq", None)
+    return x, probs
+
+
+def moe_block(params: dict, x: Array, ctx: ModelContext, *,
+              return_attn: bool = False):
+    cfg = ctx.cfg
+    x = ctx.shard(x, "batch", "seq", None)
+    h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+    probs = None
+    if return_attn:
+        a, probs = _attention_with_probs(params["attn"], h, cfg, ctx)
+    else:
+        a = attn_mod.attend_train(params["attn"], h, cfg, shard=ctx.shard,
+                                   **ctx.loop_kw, **ctx.kw)
+    x = x + ctx.shard(a, "batch", "seq", None)
+    h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)
+    m, aux = moe_mod.moe_ffn(
+        params["moe"], h, cfg,
+        mesh=ctx.mesh,
+        dp_axes=ctx.rules.batch if ctx.rules.batch else (),
+        tp_axis=ctx.rules.tensor if isinstance(ctx.rules.tensor, str) else "model",
+        **ctx.kw,
+    )
+    x = x + ctx.shard(m, "batch", "seq", None)
+    return x, probs, aux
+
+
+def ssm_block(params: dict, x: Array, ctx: ModelContext):
+    cfg = ctx.cfg
+    x = ctx.shard(x, "batch", "seq", None)
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    y = ssm_mod.ssm_forward(params["ssm"], h, cfg, shard=ctx.shard,
+                            unroll=ctx.unroll, **ctx.kw)
+    return x + ctx.shard(y, "batch", "seq", None)
+
+
+def cross_block(params: dict, x: Array, context: Array, ctx: ModelContext):
+    """Gated cross-attention + MLP (vision-text injection)."""
+    cfg = ctx.cfg
+    x = ctx.shard(x, "batch", "seq", None)
+    h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+    a = attn_mod.cross_attend(params["attn"], h, context, cfg,
+                              **ctx.loop_kw, **ctx.kw)
+    x = x + jnp.tanh(params["gate_attn"]).astype(x.dtype) * ctx.shard(
+        a, "batch", "seq", None
+    )
+    h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)
+    m = glu_mlp(params["mlp"], h, cfg.act, shard=ctx.shard, **ctx.kw)
+    x = x + jnp.tanh(params["gate_mlp"]).astype(x.dtype) * ctx.shard(
+        m, "batch", "seq", None
+    )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward: prefill (returns quantized KV) and decode (consumes cache)
+# ---------------------------------------------------------------------------
+
+
+def dense_block_prefill(params: dict, x: Array, ctx: ModelContext):
+    cfg = ctx.cfg
+    x = ctx.shard(x, "batch", "seq", None)
+    h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+    a, kv = attn_mod.attend_prefill(params["attn"], h, cfg, shard=ctx.shard,
+                                    **ctx.loop_kw, **ctx.kw)
+    x = x + ctx.shard(a, "batch", "seq", None)
+    h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)
+    if "moe" in params:
+        m, _ = moe_mod.moe_ffn(
+            params["moe"], h, cfg,
+            mesh=ctx.mesh,
+            dp_axes=ctx.rules.batch if ctx.rules.batch else (),
+            tp_axis=ctx.rules.tensor if isinstance(ctx.rules.tensor, str) else "model",
+            **ctx.kw,
+        )
+    else:
+        m = glu_mlp(params["mlp"], h, cfg.act, shard=ctx.shard, **ctx.kw)
+    x = x + ctx.shard(m, "batch", "seq", None)
+    return x, kv
+
+
+def dense_block_decode(params: dict, x: Array, layer_cache: dict, pos: Array,
+                       ctx: ModelContext):
+    cfg = ctx.cfg
+    h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+    a, new_cache = attn_mod.attend_decode(
+        params["attn"], h, layer_cache, pos, cfg, shard=ctx.shard, **ctx.kw
+    )
+    x = x + a
+    h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)
+    if "moe" in params:
+        m, _ = moe_mod.moe_ffn(
+            params["moe"], h, cfg,
+            mesh=ctx.mesh,
+            dp_axes=ctx.rules.batch if ctx.rules.batch else (),
+            tp_axis=ctx.rules.tensor if isinstance(ctx.rules.tensor, str) else "model",
+            **ctx.kw,
+        )
+    else:
+        m = glu_mlp(params["mlp"], h, cfg.act, shard=ctx.shard, **ctx.kw)
+    x = x + m
+    return x, new_cache
+
+
+def ssm_block_decode(params: dict, x: Array, layer_cache: dict,
+                     ctx: ModelContext):
+    cfg = ctx.cfg
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    y, new_cache = ssm_mod.ssm_decode(params["ssm"], h, layer_cache, cfg, **ctx.kw)
+    return x + y, new_cache

@@ -1,0 +1,157 @@
+"""Shared model layers: norms, RoPE, activations, linear dispatch.
+
+All layers are pure functions over param pytrees. A "linear weight" is either
+a plain (K, N) array (training / fp serving) or a `QuantLinear` container
+(ABQ serving path) — `apply_linear` dispatches, so every block definition is
+written once and runs in both modes. This is how the paper's engine slots in
+as a first-class feature: swap the leaves, keep the model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import PackedWeight
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# quantized-linear container (ABQ serve path)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QuantLinear:
+    """A calibrated, packed ABQ linear.
+
+    pw: bit-plane packed weight (already includes balance scaling s and the
+        rank-1 compensation folded in).
+    act_inv_s: optional (K,) reciprocal balance vector applied to the
+        activation at runtime (X / s of Eq. 1); None when folded upstream.
+    act_bits: activation bit-width p (int8 container).
+    """
+
+    pw: PackedWeight
+    act_inv_s: Optional[Array]
+    act_bits: int
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return ((ga("pw"), self.pw), (ga("act_inv_s"), self.act_inv_s)), \
+            (self.act_bits,)
+
+    def tree_flatten(self):
+        return (self.pw, self.act_inv_s), (self.act_bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        pw, inv_s = children
+        return cls(pw, inv_s, aux[0])
+
+
+def index_linear(w: Any, i: int) -> Any:
+    """Index a stacked linear (array or QuantLinear) on its leading axis."""
+    if isinstance(w, QuantLinear):
+        return jax.tree.map(lambda a: a[i], w)
+    return w[i]
+
+
+def apply_linear(x: Array, w: Any, *, backend: str = "auto",
+                 interpret: bool = False) -> Array:
+    """x [..., K] @ w -> [..., N]; dispatches dense vs ABQ-quantized."""
+    if isinstance(w, QuantLinear):
+        if w.act_inv_s is not None:
+            x = x * w.act_inv_s
+        return kops.abq_linear(
+            x, w.pw, act_bits=w.act_bits, out_dtype=x.dtype,
+            backend=backend, interpret=interpret,
+        )
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def activation(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def glu_mlp(params: dict, x: Array, act: str, *, backend: str = "auto",
+            interpret: bool = False, shard=None) -> Array:
+    """Gated MLP (SwiGLU/GeGLU) or plain MLP (relu2: gate acts as fc1).
+
+    ``shard(x, *logical)`` pins the ff intermediates to the tensor axis so
+    GSPMD never replicates the (tokens × d_ff) tensors (the 1-block memory
+    bisect in EXPERIMENTS.md §Perf shows why this matters)."""
+    sh = shard or (lambda t, *l: t)
+    gate = sh(apply_linear(x, params["w_gate"], backend=backend,
+                           interpret=interpret), "batch", None, "tensor")
+    if "w_up" in params:
+        up = sh(apply_linear(x, params["w_up"], backend=backend,
+                             interpret=interpret), "batch", None, "tensor")
+        h = activation(gate, act) * up
+    else:
+        h = activation(gate, act)
+    return apply_linear(h, params["w_down"], backend=backend, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, D); positions: (S,) or (B, S) absolute positions."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype=jnp.bfloat16, scale: Optional[float] = None):
+    fan_in = shape[0]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)

@@ -1,0 +1,628 @@
+"""The language model: init / train / prefill / decode for all 6 families.
+
+Families (DESIGN.md §6):
+  dense   — uniform stack of GQA+GLU blocks (qwen3, gemma, stablelm, minitron,
+            llama-7b)
+  moe     — dense blocks with routed-expert FFN (grok-1, qwen2-moe)
+  ssm     — uniform Mamba2/SSD stack (mamba2-2.7b)
+  hybrid  — Mamba2 stack with a *shared* attention block applied every N
+            layers (zamba2)
+  vlm     — groups of (k−1 self layers + 1 gated cross-attn layer) attending
+            to stub image embeddings (llama-3.2-vision)
+  audio   — dense stack over summed EnCodec codebook embeddings with one
+            output head per codebook (musicgen)
+
+Layer params are stacked on a leading axis and driven by lax.scan (compile
+time independent of depth); training wraps the scan body in jax.checkpoint.
+The same block code runs fp (training) and ABQ-quantized (serving) — the
+quantized param tree just swaps linear leaves for QuantLinear containers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks as B
+from repro.models import ssm as ssm_mod
+from repro.models.blocks import ModelContext
+from repro.models.layers import apply_linear, embed_init, dense_init, index_linear, rms_norm
+from repro.models.loss import logits_last_token, xent_chunked
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    vp = cfg.padded_vocab
+    d = cfg.d_model
+    params: dict[str, Any] = {"final_norm": jnp.ones((d,), dtype)}
+
+    if cfg.family == "audio":
+        params["embed"] = (
+            jax.random.normal(ks[0], (cfg.n_codebooks, vp, d), jnp.float32) * 0.02
+        ).astype(dtype)
+        params["heads"] = (
+            jax.random.normal(ks[1], (cfg.n_codebooks, d, vp), jnp.float32)
+            * d**-0.5
+        ).astype(dtype)
+    else:
+        params["embed"] = (
+            jax.random.normal(ks[0], (vp, d), jnp.float32) * 0.02
+        ).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], (d, vp), dtype)
+
+    if cfg.family in ("dense", "audio"):
+        params["blocks"] = _stack_init(
+            lambda k: B.init_dense_block(k, cfg, dtype), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "moe":
+        params["blocks"] = _stack_init(
+            lambda k: B.init_moe_block(k, cfg, dtype), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: B.init_ssm_block(k, cfg, dtype), ks[2], cfg.n_layers
+        )
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack_init(
+            lambda k: B.init_ssm_block(k, cfg, dtype), ks[2], cfg.n_layers
+        )
+        params["shared_attn"] = B.init_dense_block(ks[3], cfg, dtype)
+    elif cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        n_groups = cfg.n_layers // every
+        n_self = n_groups * (every - 1)
+        params["self_blocks"] = _stack_init(
+            lambda k: B.init_dense_block(k, cfg, dtype), ks[2], n_self
+        )
+        params["cross_blocks"] = _stack_init(
+            lambda k: B.init_cross_block(k, cfg, dtype), ks[3], n_groups
+        )
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head helpers
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens: Array, cfg: ArchConfig, ctx: ModelContext) -> Array:
+    if cfg.family == "audio":
+        # tokens: (B, S, n_codebooks) -> sum of codebook embeddings
+        h = jnp.zeros(tokens.shape[:2] + (cfg.d_model,),
+                      params["embed"].dtype)
+        for cb in range(cfg.n_codebooks):
+            h = h + jnp.take(params["embed"][cb], tokens[..., cb], axis=0)
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    return ctx.shard(h, "batch", "seq", None)
+
+
+def lm_head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"]
+        return w.T if hasattr(w, "T") else w
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# stacks (train / full-sequence forward)
+# ---------------------------------------------------------------------------
+
+
+def _scan_stack(stacked_params, x, ctx: ModelContext, body_fn, extra=None):
+    """lax.scan over stacked layer params; body returns new carry."""
+
+    def body(carry, layer_params):
+        if extra is None:
+            y = body_fn(layer_params, carry, ctx)
+        else:
+            y = body_fn(layer_params, carry, extra, ctx)
+        return y, None
+
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked_params, unroll=ctx.unroll)
+    return x
+
+
+def _reshape_groups(tree, n_groups: int, group: int):
+    return jax.tree.map(
+        lambda a: a[: n_groups * group].reshape((n_groups, group) + a.shape[1:]),
+        tree,
+    )
+
+
+def _tail(tree, start: int):
+    return jax.tree.map(lambda a: a[start:], tree)
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig, ctx: ModelContext,
+                   image_embeds: Optional[Array] = None) -> tuple[Array, Array]:
+    """Token ids -> final hidden states (pre-head). Returns (h, aux_loss)."""
+    h = embed_tokens(params, tokens, cfg, ctx)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "audio"):
+        h = _scan_stack(params["blocks"], h, ctx,
+                        lambda p, x, c: B.dense_block(p, x, c)[0])
+    elif cfg.family == "moe":
+        def body(carry, layer_params):
+            x, a = carry
+            x, _, aux_l = B.moe_block(layer_params, x, ctx)
+            return (x, a + aux_l), None
+
+        body_fn = jax.checkpoint(body) if ctx.remat else body
+        (h, aux), _ = jax.lax.scan(body_fn, (h, aux), params["blocks"],
+                                   unroll=ctx.unroll)
+    elif cfg.family == "ssm":
+        h = _scan_stack(params["blocks"], h, ctx, B.ssm_block)
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        rem = cfg.n_layers - n_groups * every
+        grouped = _reshape_groups(params["blocks"], n_groups, every)
+        shared = params["shared_attn"]
+
+        def group_body(carry, group_params):
+            x = carry
+            x = _scan_stack(group_params, x, dataclass_no_remat(ctx), B.ssm_block)
+            x, _ = B.dense_block(shared, x, ctx)
+            return x, None
+
+        gb = jax.checkpoint(group_body) if ctx.remat else group_body
+        h, _ = jax.lax.scan(gb, h, grouped, unroll=ctx.unroll)
+        if rem:
+            h = _scan_stack(_tail(params["blocks"], n_groups * every), h, ctx,
+                            B.ssm_block)
+    elif cfg.family == "vlm":
+        assert image_embeds is not None, "vlm needs image embeddings (stub frontend)"
+        every = cfg.cross_attn_every
+        n_groups = cfg.n_layers // every
+        self_grouped = _reshape_groups(params["self_blocks"], n_groups, every - 1)
+
+        def group_body(carry, xs):
+            x = carry
+            sp, cp = xs
+            x = _scan_stack(sp, x, dataclass_no_remat(ctx),
+                            lambda p, y, c: B.dense_block(p, y, c)[0])
+            x = B.cross_block(cp, x, image_embeds, ctx)
+            return x, None
+
+        gb = jax.checkpoint(group_body) if ctx.remat else group_body
+        h, _ = jax.lax.scan(gb, h, (self_grouped, params["cross_blocks"]),
+                            unroll=ctx.unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def dataclass_no_remat(ctx: ModelContext) -> ModelContext:
+    import dataclasses
+
+    return dataclasses.replace(ctx, remat=False)
+
+
+# ---------------------------------------------------------------------------
+# training loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, ctx: ModelContext,
+            n_loss_chunks: int = 8) -> tuple[Array, dict]:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    h, aux = forward_hidden(params, tokens, cfg, ctx,
+                            image_embeds=batch.get("image_embeds"))
+    if cfg.family == "audio":
+        # mean NLL over the n_codebooks heads
+        total = jnp.zeros((), jnp.float32)
+        for cb in range(cfg.n_codebooks):
+            total = total + xent_chunked(
+                h, index_linear(params["heads"], cb), labels[..., cb],
+                shard=ctx.shard, n_chunks=n_loss_chunks, unroll=ctx.unroll,
+            )
+        loss = total / cfg.n_codebooks
+    else:
+        loss = xent_chunked(
+            h, lm_head_weight(params, cfg), labels,
+            shard=ctx.shard, n_chunks=n_loss_chunks, unroll=ctx.unroll,
+        )
+    metrics = {"loss": loss, "aux_loss": aux}
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill
+# ---------------------------------------------------------------------------
+
+
+def _attn_stack_prefill(stacked_params, h, ctx):
+    """Scan dense/moe blocks, emitting quantized KV per layer."""
+
+    def body(carry, layer_params):
+        x = carry
+        x, kv = B.dense_block_prefill(layer_params, x, ctx)
+        return x, kv
+
+    h, kvs = jax.lax.scan(body, h, stacked_params, unroll=ctx.unroll)
+    return h, {"k": kvs[0], "k_scale": kvs[1], "v": kvs[2], "v_scale": kvs[3]}
+
+
+def _pad_cache(cache_kv: dict, max_len: int, seq_axis: int = 3) -> dict:
+    """Grow prefill KV to the decode cache capacity (zero-padded).
+
+    Attention-native layout: values (L,B,KVH,S,D) and scales (L,B,KVH,S) —
+    the sequence axis is 3 for both."""
+
+    def pad(a):
+        pad_widths = [(0, 0)] * a.ndim
+        pad_widths[seq_axis] = (0, max_len - a.shape[seq_axis])
+        return jnp.pad(a, pad_widths)
+
+    return jax.tree.map(pad, cache_kv)
+
+
+def prefill(params, tokens, cfg: ArchConfig, ctx: ModelContext, *,
+            max_len: int, image_embeds: Optional[Array] = None):
+    """Run the prompt, build the decode cache. Returns (last_logits, cache)."""
+    b, s = tokens.shape[0], tokens.shape[1]
+    h = embed_tokens(params, tokens, cfg, ctx)
+    cache: dict[str, Any] = {"pos": jnp.asarray(s, jnp.int32)}
+
+    if cfg.family in ("dense", "moe", "audio"):
+        h, kv = _attn_stack_prefill(params["blocks"], h, ctx)
+        cache["attn"] = _pad_cache(kv, max_len)
+    elif cfg.family == "ssm":
+        # run full-seq SSD, then recompute final states via a short decode
+        # replay of the last conv window; cheaper: use ssd scan's final state.
+        h, ssm_cache = _ssm_stack_prefill(params["blocks"], h, cfg, ctx)
+        cache["ssm"] = ssm_cache
+    elif cfg.family == "hybrid":
+        h, ssm_cache, attn_cache = _hybrid_prefill(params, h, cfg, ctx, max_len)
+        cache["ssm"] = ssm_cache
+        cache["attn"] = attn_cache
+    elif cfg.family == "vlm":
+        assert image_embeds is not None
+        h, self_cache, cross_cache = _vlm_prefill(params, h, image_embeds, cfg,
+                                                  ctx, max_len)
+        cache["attn"] = self_cache
+        cache["cross"] = cross_cache
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    h_last = h[:, -1:]
+    if cfg.family == "audio":
+        logits = jnp.stack(
+            [logits_last_token(h_last, index_linear(params["heads"], cb), ctx.shard)
+             for cb in range(cfg.n_codebooks)],
+            axis=-2,
+        )  # (B, 1, n_cb, V)
+    else:
+        logits = logits_last_token(h_last, lm_head_weight(params, cfg), ctx.shard)
+    return logits, cache
+
+
+def _ssm_stack_prefill(stacked_params, h, cfg, ctx):
+    """SSD forward that also returns per-layer final (conv, state) caches.
+
+    We reuse ssm_forward for the hidden stream; final states come from a
+    dedicated pass inside ssm.py would double compute — instead we exploit
+    that the SSD scan's carried state at the last chunk IS the decode state.
+    For simplicity and correctness we recompute conv tails + final state with
+    a cheap targeted helper.
+    """
+
+    def body(carry, layer_params):
+        x = carry
+        xn = rms_norm(x, layer_params["norm"], cfg.norm_eps)
+        y, st = ssm_mod.ssm_forward_with_state(layer_params["ssm"], xn, cfg,
+                                               shard=ctx.shard, **ctx.kw)
+        return x + y, st
+
+    h, states = jax.lax.scan(body, h, stacked_params, unroll=ctx.unroll)
+    return h, states
+
+
+def _hybrid_prefill(params, h, cfg, ctx, max_len):
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    rem = cfg.n_layers - n_groups * every
+    grouped = _reshape_groups(params["blocks"], n_groups, every)
+    shared = params["shared_attn"]
+
+    def group_body(carry, group_params):
+        x = carry
+
+        def inner(c, lp):
+            xn = rms_norm(c, lp["norm"], cfg.norm_eps)
+            y, st = ssm_mod.ssm_forward_with_state(lp["ssm"], xn, cfg,
+                                                   shard=ctx.shard, **ctx.kw)
+            return c + y, st
+
+        x, states = jax.lax.scan(inner, x, group_params, unroll=ctx.unroll)
+        xn = rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+        a, kv = attn_mod.attend_prefill(shared["attn"], xn, cfg,
+                                        shard=ctx.shard, **ctx.loop_kw,
+                                        **ctx.kw)
+        x = x + a
+        hn = rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
+        from repro.models.layers import glu_mlp
+
+        x = x + glu_mlp(shared["mlp"], hn, cfg.act, shard=ctx.shard, **ctx.kw)
+        return x, (states, kv)
+
+    h, (ssm_states, kvs) = jax.lax.scan(group_body, h, grouped,
+                                        unroll=ctx.unroll)
+    # ssm_states leaves: (n_groups, every, B, ...) -> flatten to (L_used, ...)
+    ssm_cache = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), ssm_states
+    )
+    if rem:
+        def inner(c, lp):
+            xn = rms_norm(c, lp["norm"], cfg.norm_eps)
+            y, st = ssm_mod.ssm_forward_with_state(lp["ssm"], xn, cfg,
+                                                   shard=ctx.shard, **ctx.kw)
+            return c + y, st
+
+        h, tail_states = jax.lax.scan(inner, h,
+                                      _tail(params["blocks"], n_groups * every),
+                                      unroll=ctx.unroll)
+        ssm_cache = jax.tree.map(
+            lambda a, b_: jnp.concatenate([a, b_], axis=0), ssm_cache, tail_states
+        )
+    attn_cache = _pad_cache(
+        {"k": kvs[0], "k_scale": kvs[1], "v": kvs[2], "v_scale": kvs[3]}, max_len
+    )
+    return h, ssm_cache, attn_cache
+
+
+def _vlm_prefill(params, h, image_embeds, cfg, ctx, max_len):
+    every = cfg.cross_attn_every
+    n_groups = cfg.n_layers // every
+    self_grouped = _reshape_groups(params["self_blocks"], n_groups, every - 1)
+
+    def group_body(carry, xs):
+        x = carry
+        sp, cp = xs
+
+        def inner(c, lp):
+            c2, kv = B.dense_block_prefill(lp, c, ctx)
+            return c2, kv
+
+        x, kvs = jax.lax.scan(inner, x, sp, unroll=ctx.unroll)
+        # cross block: cache image K/V (quantized) once
+        xn = rms_norm(x, cp["attn_norm"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        bt = image_embeds.shape[0]
+        t = image_embeds.shape[1]
+        k = apply_linear(image_embeds, cp["attn"]["wk"], **ctx.kw).reshape(
+            bt, t, cfg.n_kv_heads, hd)
+        v = apply_linear(image_embeds, cp["attn"]["wv"], **ctx.kw).reshape(
+            bt, t, cfg.n_kv_heads, hd)
+        kq, ks_, vq, vs_ = attn_mod.quantize_kv_cached(k, v)
+        x = B.cross_block(cp, x, image_embeds, ctx)
+        return x, (kvs, (kq, ks_, vq, vs_))
+
+    h, (self_kvs, cross_kvs) = jax.lax.scan(
+        group_body, h, (self_grouped, params["cross_blocks"]),
+        unroll=ctx.unroll,
+    )
+    self_cache = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                              {"k": self_kvs[0], "k_scale": self_kvs[1],
+                               "v": self_kvs[2], "v_scale": self_kvs[3]})
+    self_cache = _pad_cache(self_cache, max_len)
+    cross_cache = {"k": cross_kvs[0], "k_scale": cross_kvs[1],
+                   "v": cross_kvs[2], "v_scale": cross_kvs[3]}
+    return h, self_cache, cross_cache
+
+
+# ---------------------------------------------------------------------------
+# serving: decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig,
+                ctx: ModelContext):
+    """One token for every sequence. tokens: (B, 1) (audio: (B, 1, n_cb)).
+
+    Returns (logits, new_cache). This is the function the decode_32k /
+    long_500k dry-run cells lower — the ABQ regime.
+    """
+    pos = cache["pos"]
+    h = embed_tokens(params, tokens, cfg, ctx)
+    new_cache: dict[str, Any] = {"pos": pos + 1}
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(carry, xs):
+            x = carry
+            lp, lc = xs
+            x, nc = B.dense_block_decode(lp, x, lc, pos, ctx)
+            return x, nc
+
+        h, updated = jax.lax.scan(body, h, (params["blocks"], cache["attn"]),
+                                  unroll=ctx.unroll)
+        new_cache["attn"] = updated
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, lc = xs
+            x, nc = B.ssm_block_decode(lp, x, lc, ctx)
+            return x, nc
+
+        h, updated = jax.lax.scan(body, h, (params["blocks"], cache["ssm"]),
+                                  unroll=ctx.unroll)
+        new_cache["ssm"] = updated
+    elif cfg.family == "hybrid":
+        h, new_cache = _hybrid_decode(params, h, cache, pos, cfg, ctx, new_cache)
+    elif cfg.family == "vlm":
+        h, new_cache = _vlm_decode(params, h, cache, pos, cfg, ctx, new_cache)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "audio":
+        logits = jnp.stack(
+            [logits_last_token(h, index_linear(params["heads"], cb), ctx.shard)
+             for cb in range(cfg.n_codebooks)],
+            axis=-2,
+        )
+    else:
+        logits = logits_last_token(h, lm_head_weight(params, cfg), ctx.shard)
+    return logits, new_cache
+
+
+def _hybrid_decode(params, h, cache, pos, cfg, ctx, new_cache):
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    rem = cfg.n_layers - n_groups * every
+    grouped = _reshape_groups(params["blocks"], n_groups, every)
+    ssm_grouped = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]),
+        cache["ssm"],
+    )
+    shared = params["shared_attn"]
+
+    def group_body(carry, xs):
+        x = carry
+        gp, gc, ac = xs
+
+        def inner(c, lp_lc):
+            lp, lc = lp_lc
+            return B.ssm_block_decode(lp, c, lc, ctx)
+
+        x, new_ssm = jax.lax.scan(inner, x, (gp, gc), unroll=ctx.unroll)
+        x, new_attn = B.dense_block_decode(shared, x, ac, pos, ctx)
+        return x, (new_ssm, new_attn)
+
+    h, (new_ssm_g, new_attn) = jax.lax.scan(
+        group_body, h, (grouped, ssm_grouped, cache["attn"]),
+        unroll=ctx.unroll,
+    )
+    new_ssm = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), new_ssm_g)
+    if rem:
+        tail_cache = jax.tree.map(lambda a: a[n_groups * every:], cache["ssm"])
+
+        def inner(c, lp_lc):
+            lp, lc = lp_lc
+            return B.ssm_block_decode(lp, c, lc, ctx)
+
+        h, new_tail = jax.lax.scan(
+            inner, h, (_tail(params["blocks"], n_groups * every), tail_cache),
+            unroll=ctx.unroll,
+        )
+        new_ssm = jax.tree.map(
+            lambda a, b_: jnp.concatenate([a, b_], axis=0), new_ssm, new_tail
+        )
+    new_cache["ssm"] = new_ssm
+    new_cache["attn"] = new_attn
+    return h, new_cache
+
+
+def _vlm_decode(params, h, cache, pos, cfg, ctx, new_cache):
+    every = cfg.cross_attn_every
+    n_groups = cfg.n_layers // every
+    self_grouped = _reshape_groups(params["self_blocks"], n_groups, every - 1)
+    self_cache_g = jax.tree.map(
+        lambda a: a.reshape((n_groups, every - 1) + a.shape[1:]), cache["attn"]
+    )
+
+    def group_body(carry, xs):
+        x = carry
+        sp, sc, cp, cc = xs
+
+        def inner(c, lp_lc):
+            lp, lc = lp_lc
+            x2, nc = B.dense_block_decode(lp, c, lc, pos, ctx)
+            return x2, nc
+
+        x, new_self = jax.lax.scan(inner, x, (sp, sc), unroll=ctx.unroll)
+        # gated cross attention against the cached image K/V
+        from repro.kernels import ops as kops
+
+        xn = rms_norm(x, cp["attn_norm"], cfg.norm_eps)
+        bq = xn.shape[0]
+        hd = cfg.resolved_head_dim
+        q = apply_linear(xn, cp["attn"]["wq"], **ctx.kw).reshape(
+            bq, 1, cfg.n_heads, hd)
+        a = kops.decode_attention(q, cc["k"], cc["v"], cc["k_scale"],
+                                  cc["v_scale"])
+        a = a.reshape(bq, 1, cfg.n_heads * hd)
+        a = apply_linear(a, cp["attn"]["wo"], **ctx.kw)
+        x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * a
+        from repro.models.layers import glu_mlp
+
+        hn = rms_norm(x, cp["mlp_norm"], cfg.norm_eps)
+        m = glu_mlp(cp["mlp"], hn, cfg.act, shard=ctx.shard, **ctx.kw)
+        x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * m
+        return x, new_self
+
+    h, new_self_g = jax.lax.scan(
+        group_body, h,
+        (self_grouped, self_cache_g, params["cross_blocks"], cache["cross"]),
+        unroll=ctx.unroll,
+    )
+    new_cache["attn"] = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), new_self_g
+    )
+    new_cache["cross"] = cache["cross"]
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache init (decode-only dry-run cells build the cache from specs)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    cache: dict[str, Any] = {"pos": jnp.asarray(0, jnp.int32)}
+    if cfg.family in ("dense", "moe", "audio"):
+        cache["attn"] = attn_mod.init_kv_cache(cfg, batch, max_len)
+    elif cfg.family == "ssm":
+        cache["ssm"] = ssm_mod.init_ssm_cache(cfg, batch)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        cache["ssm"] = ssm_mod.init_ssm_cache(cfg, batch)
+        cache["attn"] = attn_mod.init_kv_cache(cfg, batch, max_len,
+                                               n_layers=n_groups)
+    elif cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        n_self = n_groups * (cfg.cross_attn_every - 1)
+        cache["attn"] = attn_mod.init_kv_cache(cfg, batch, max_len,
+                                               n_layers=n_self)
+        hd = cfg.resolved_head_dim
+        t = cfg.n_image_tokens
+        cache["cross"] = {
+            "k": jnp.zeros((n_groups, batch, cfg.n_kv_heads, t, hd), jnp.int8),
+            "k_scale": jnp.zeros((n_groups, batch, cfg.n_kv_heads, t),
+                                 jnp.float32),
+            "v": jnp.zeros((n_groups, batch, cfg.n_kv_heads, t, hd), jnp.int8),
+            "v_scale": jnp.zeros((n_groups, batch, cfg.n_kv_heads, t),
+                                 jnp.float32),
+        }
+    return cache

@@ -1,0 +1,72 @@
+"""Vocab-sharded, sequence-chunked cross-entropy.
+
+The (B, S, V) logits tensor for a 256k-vocab arch at train_4k is ~0.8 TB in
+bf16 — it must never materialize. We scan over sequence chunks: each chunk
+projects (B, C, D) @ (D, V) -> (B, C, V) (vocab tensor-sharded), reduces to
+per-token loss, and the backward recomputes the chunk logits (jax.checkpoint
+around the chunk body). Peak memory is one chunk of logits per device.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear
+
+Array = jax.Array
+
+
+def _chunk_loss(h_chunk: Array, labels_chunk: Array, w_head: Any,
+                mask_chunk: Array, shard) -> tuple[Array, Array]:
+    logits = apply_linear(h_chunk, w_head)  # (B, C, V)
+    logits = shard(logits, "batch", None, "tensor").astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels_chunk[..., None], axis=-1)[..., 0]
+    nll = (logz - picked) * mask_chunk
+    return jnp.sum(nll), jnp.sum(mask_chunk)
+
+
+def xent_chunked(
+    h: Array,  # (B, S, D) final hidden states
+    w_head: Any,  # (D, V) lm head (dense or QuantLinear)
+    labels: Array,  # (B, S) int32
+    *,
+    shard,
+    n_chunks: int = 8,
+    mask: Optional[Array] = None,
+    unroll: bool = False,
+) -> Array:
+    """Mean next-token NLL. ``shard`` is ctx.shard (logical constraint fn)."""
+    b, s, d = h.shape
+    n_chunks = min(n_chunks, s)
+    while s % n_chunks:
+        n_chunks -= 1
+    c = s // n_chunks
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    hc = h.reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hcb, lcb, mcb = xs
+        loss_sum, n = jax.checkpoint(
+            lambda a, b_, m_: _chunk_loss(a, b_, w_head, m_, shard)
+        )(hcb, lcb, mcb)
+        return (tot + loss_sum, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (hc, lc, mc), unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last_token(h_last: Array, w_head: Any, shard) -> Array:
+    """(B, 1, D) -> (B, 1, V) logits for sampling/eval at decode."""
+    logits = apply_linear(h_last, w_head)
+    return shard(logits, "batch", None, "tensor")

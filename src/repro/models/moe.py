@@ -1,0 +1,244 @@
+"""Top-k routed MoE with optional shared experts (grok-1, qwen2-moe).
+
+Dispatch is sort-free capacity-based gather/scatter executed **locally per
+data shard** inside a `shard_map` (DESIGN.md §4): tokens never cross the data
+axis (no all-to-all in the baseline — recorded as a perf-iteration option);
+the expert FFN contraction dim (d_ff) is tensor-parallel, so the only
+collective inside the layer is the psum over the model axis after down-proj.
+
+Routing math (per shard):
+  logits -> softmax -> top-k -> position-within-expert via counts cumsum
+  -> scatter into (E, C, d) buffers (capacity-dropped) -> batched expert
+  einsum -> weighted scatter-add back to tokens.
+
+The router runs in fp32 (accuracy-critical, like the paper keeping softmax
+fp); expert GEMMs run through `apply_linear`, so the ABQ serve path quantizes
+them like any other linear.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.core.quantizers import PackedWeight
+from repro.kernels import ops as kops
+from repro.models.layers import QuantLinear, activation, apply_linear, dense_init
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# expert matmul: dense einsum or vmapped ABQ bit-plane GEMM
+# ---------------------------------------------------------------------------
+
+
+def _expert_matmul(buf: Array, w: Any, *, backend: str = "auto",
+                   interpret: bool = False) -> Array:
+    """(E, C, K) x per-expert weight -> (E, C, N).
+
+    Quantized experts run the paper's kernel per expert (vmapped); the
+    per-shard activation quantization when K is tensor-sharded acts as
+    shard-group quantization (exact partial dequant + psum, DESIGN.md §4).
+    """
+    if isinstance(w, QuantLinear):
+        planes, scale, zp = w.pw.planes, w.pw.scale, w.pw.zero_point
+        k_local = planes.shape[-2] * 32
+        bits = w.pw.bits
+
+        def one(buf_e, planes_e, scale_e, zp_e, inv_s_e=None):
+            x = buf_e if inv_s_e is None else buf_e * inv_s_e
+            xq, xs = kops.act_quant(x, bits=w.act_bits, backend=backend,
+                                    interpret=interpret)
+            pw_e = PackedWeight(planes_e, scale_e, zp_e, bits, k_local)
+            return kops.abq_matmul(xq, xs, pw_e, out_dtype=buf_e.dtype,
+                                   backend=backend, interpret=interpret)
+
+        if w.act_inv_s is None:
+            return jax.vmap(one)(buf, planes, scale, zp)
+        return jax.vmap(one)(buf, planes, scale, zp, w.act_inv_s)
+    return jnp.einsum("eck,ekn->ecn", buf, w.astype(buf.dtype))
+
+
+def _wspec(w: Any, role: str, tp) -> Any:
+    """shard_map in_specs for an expert weight (dense or QuantLinear).
+
+    role 'up': contraction d (unsharded), output ff (tensor-sharded);
+    role 'down': contraction ff (tensor-sharded words), output d.
+    """
+    def leaf_spec(leaf):
+        if leaf.ndim == 4:  # planes (E, P, Kw, N)
+            return P(None, None, None, tp) if role == "up" else P(None, None, tp, None)
+        if leaf.ndim == 3 and leaf.shape[1] == 1:  # scale/zp (E, 1, N)
+            return P(None, None, tp) if role == "up" else P(None, None, None)
+        if leaf.ndim == 3:  # dense (E, K, N)
+            return P(None, None, tp) if role == "up" else P(None, tp, None)
+        if leaf.ndim == 2:  # act_inv_s (E, K)
+            return P(None, None) if role == "up" else P(None, tp)
+        raise ValueError(f"unexpected expert weight leaf rank {leaf.ndim}")
+
+    return jax.tree.map(leaf_spec, w)
+
+
+def init_moe_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * d**-0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d), jnp.float32) * ff**-0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        sff = (cfg.moe_d_ff or cfg.d_ff) * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], (d, sff), dtype),
+            "w_up": dense_init(ks[5], (d, sff), dtype),
+            "w_down": dense_init(ks[4], (sff, d), dtype),
+        }
+    return p
+
+
+def _route(router_w: Array, x_flat: Array, top_k: int):
+    """fp32 router: returns (weights (T,k), experts (T,k), aux load loss)."""
+    logits = x_flat.astype(jnp.float32) @ router_w  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9
+    )
+    # Switch-style load-balancing aux loss
+    e = router_w.shape[1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    aux = e * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def _dispatch_compute_combine(
+    x_flat: Array,  # (T, d) local tokens
+    weights: Array,  # (T, k)
+    experts: Array,  # (T, k)
+    w_gate: Any,  # (E, d, ff_local) dense or QuantLinear
+    w_up: Any,
+    w_down: Any,  # (E, ff_local, d) dense or QuantLinear
+    capacity: int,
+    act: str,
+    n_experts: int,
+):
+    t, d = x_flat.shape
+    e = n_experts
+    k = experts.shape[1]
+    flat_e = experts.reshape(-1)  # (T*k,)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    # position of each assignment within its expert (first-come priority)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    valid = pos < capacity
+    safe_pos = jnp.where(valid, pos, 0)
+
+    buf = jnp.zeros((e, capacity, d), x_flat.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        x_flat[tok_idx] * valid[:, None].astype(x_flat.dtype),
+        mode="drop",
+    )
+    # expert FFN: (E, C, d) x (E, d, ff) -> (E, C, ff)
+    g = _expert_matmul(buf, w_gate)
+    u = _expert_matmul(buf, w_up)
+    h = activation(g, act) * u
+    y_buf = _expert_matmul(h, w_down)
+    # combine
+    gathered = y_buf[flat_e, safe_pos]  # (T*k, d)
+    contrib = gathered * (weights.reshape(-1)[:, None] * valid[:, None]).astype(
+        gathered.dtype
+    )
+    y = jnp.zeros_like(x_flat)
+    y = y.at[tok_idx].add(contrib)
+    return y
+
+
+def moe_ffn(
+    params: dict,
+    x: Array,  # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    dp_axes: Any = ("pod", "data"),
+    tp_axis: str = "model",
+    backend: str = "auto",
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Routed-experts FFN (+ shared experts). Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    top_k = cfg.top_k
+
+    def local_moe(xl, router_w, w_gate, w_up, w_down, *, tp_size: int,
+                  dp: tuple = ()):
+        bl, sl = xl.shape[0], xl.shape[1]
+        t_local = bl * sl
+        cap = max(
+            top_k,
+            int(math.ceil(t_local * top_k / cfg.n_experts * cfg.capacity_factor)),
+        )
+        x_flat = xl.reshape(t_local, d)
+        weights, experts, aux = _route(router_w, x_flat, top_k)
+        y = _dispatch_compute_combine(
+            x_flat, weights, experts, w_gate, w_up, w_down, cap, cfg.act,
+            cfg.n_experts,
+        )
+        if tp_size > 1:
+            y = jax.lax.psum(y, tp_axis)
+            aux = jax.lax.pmean(aux, tp_axis)
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return y.reshape(bl, sl, d), aux
+
+    if mesh is None or mesh.empty or mesh.size == 1:
+        y, aux = local_moe(
+            x,
+            params["router"],
+            params["w_gate"],
+            params["w_up"],
+            params["w_down"],
+            tp_size=1,
+        )
+    else:
+        dp = tuple(a for a in (dp_axes if isinstance(dp_axes, tuple) else (dp_axes,))
+                   if a in mesh.axis_names)
+        tp = tp_axis if tp_axis in mesh.axis_names else None
+        tp_size = mesh.shape[tp] if tp else 1
+        in_specs = (
+            P(dp, None, None),                # x: batch-sharded, full seq/d
+            P(None, None),                    # router replicated
+            _wspec(params["w_gate"], "up", tp),   # experts: ff tensor-parallel
+            _wspec(params["w_up"], "up", tp),
+            _wspec(params["w_down"], "down", tp),
+        )
+        out_specs = (P(dp, None, None), P())
+        y, aux = jax.shard_map(
+            partial(local_moe, tp_size=tp_size, dp=dp),
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        g = apply_linear(x, sh["w_gate"], backend=backend, interpret=interpret)
+        u = apply_linear(x, sh["w_up"], backend=backend, interpret=interpret)
+        hsh = activation(g, cfg.act) * u
+        y = y + apply_linear(hsh, sh["w_down"], backend=backend, interpret=interpret)
+    return y, aux

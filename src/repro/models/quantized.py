@@ -1,0 +1,199 @@
+"""Offline model quantization: fp param tree -> ABQ serve-path param tree.
+
+Swaps every quantizable linear leaf for a `QuantLinear` (bit-plane packed
+weight + runtime balance vector), leaving norms, embeddings, routers, and the
+SSM recurrence parameters in fp — exactly the paper's deployment split
+(Fig. 4b: GEMMs run on ABQKernel; softmax/norm/rope stay fp).
+
+Works on *stacked* layer trees by vmapping the per-matrix packer over the
+leading layer axis, so a 64-layer model quantizes as one vectorized op per
+weight kind.
+
+Calibration results (per-linear balance vector s, clipping α/β, compensation
+a·bᵀ) enter through a parallel ``calib`` tree with the same structure; absent
+entries fall back to RTN (the paper's no-calibration baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.quantizers import PackedWeight, QuantSpec, pack_weight
+from repro.models.layers import QuantLinear
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeConfig:
+    """Deployment quantization config (the paper's WpAq notation)."""
+
+    w_bits: int = 2
+    a_bits: int = 8
+    bit_balance: bool = False  # True = the paper's W n* configs
+    quantize_lm_head: bool = True
+    quantize_moe_experts: bool = True
+    group_size: int = 0  # 0 -> per-channel; 128 -> per-group g128
+    tensor_par: int = 1  # used to check expert packing divisibility
+
+    @property
+    def wspec(self) -> QuantSpec:
+        return QuantSpec(
+            bits=self.w_bits,
+            bit_balance=self.bit_balance,
+            granularity="per_group" if self.group_size else "per_channel",
+            group_size=self.group_size or 128,
+            channel_axis=1,
+        )
+
+    def tag(self) -> str:
+        star = "*" if self.bit_balance else ""
+        return f"W{self.w_bits}{star}A{self.a_bits}"
+
+
+# quantizable 2-D linear leaf names, by block kind
+_ATTN_LINEARS = ("wq", "wk", "wv", "wo")
+_MLP_LINEARS = ("w_gate", "w_up", "w_down")
+_SSM_LINEARS = ("wz", "wx", "wB", "wC", "wdt", "wout")
+
+
+def _pack_one(w2d: Array, spec: QuantSpec, calib: Optional[dict]) -> QuantLinear:
+    """Quantize a single (K, N) matrix with optional calibration params."""
+    w = w2d.astype(jnp.float32)
+    inv_s = None
+    alpha = beta = None
+    comp = None
+    if calib is not None:
+        s = jnp.exp(calib["log_s"].astype(jnp.float32))  # (K,)
+        w = w * s[:, None]
+        inv_s = (1.0 / s).astype(jnp.bfloat16)
+        alpha = jax.nn.sigmoid(calib["alpha_raw"].astype(jnp.float32))
+        beta = jax.nn.sigmoid(calib["beta_raw"].astype(jnp.float32))
+        if "comp_a" in calib:
+            comp = jnp.outer(
+                calib["comp_a"].astype(jnp.float32),
+                calib["comp_b"].astype(jnp.float32),
+            )
+    pw = pack_weight(w, spec, alpha=alpha, beta=beta, compensation=comp)
+    return QuantLinear(pw=pw, act_inv_s=inv_s, act_bits=0)  # bits set by caller
+
+
+def _pack_stacked(w: Array, spec: QuantSpec, a_bits: int,
+                  calib: Optional[Any] = None) -> QuantLinear:
+    """Pack (L, K, N) stacked weights via vmap; (K, N) packs directly."""
+    if w.ndim == 2:
+        q = _pack_one(w, spec, calib)
+        return QuantLinear(q.pw, q.act_inv_s, a_bits)
+    if w.ndim == 3:
+        q = jax.vmap(lambda m, c=None: _pack_one(m, spec, None))(w) \
+            if calib is None else jax.vmap(
+                lambda m, c: _pack_one(m, spec, c))(w, calib)
+        return QuantLinear(q.pw, q.act_inv_s, a_bits)
+    raise ValueError(f"cannot pack weight of rank {w.ndim}")
+
+
+def _maybe_calib(calib: Optional[dict], *path):
+    node = calib
+    for p in path:
+        if node is None or p not in node:
+            return None
+        node = node[p]
+    return node
+
+
+def quantize_block_tree(block_params: dict, qcfg: QuantizeConfig,
+                        cfg: ArchConfig, calib: Optional[dict] = None) -> dict:
+    """Quantize one (possibly stacked) block param dict."""
+    out: dict[str, Any] = {}
+    for name, val in block_params.items():
+        if name == "attn":
+            out[name] = {
+                k: (_pack_stacked(v, qcfg.wspec, qcfg.a_bits,
+                                  _maybe_calib(calib, name, k))
+                    if k in _ATTN_LINEARS else v)
+                for k, v in val.items()
+            }
+        elif name in ("mlp", "shared"):
+            out[name] = {
+                k: (_pack_stacked(v, qcfg.wspec, qcfg.a_bits,
+                                  _maybe_calib(calib, name, k))
+                    if k in _MLP_LINEARS else v)
+                for k, v in val.items()
+            }
+        elif name == "ssm":
+            out[name] = {
+                k: (_pack_stacked(v, qcfg.wspec, qcfg.a_bits,
+                                  _maybe_calib(calib, name, k))
+                    if k in _SSM_LINEARS else v)
+                for k, v in val.items()
+            }
+        elif name == "moe":
+            out[name] = _quantize_moe(val, qcfg, cfg, calib)
+        else:
+            out[name] = val
+    return out
+
+
+def _expert_ff_packable(cfg: ArchConfig, qcfg: QuantizeConfig) -> bool:
+    """Routed-expert down-proj packs its contraction dim (ff) into 32-bit
+    words that must still divide by the tensor axis (DESIGN.md §6)."""
+    ff = cfg.moe_d_ff or cfg.d_ff
+    return ff % (32 * max(qcfg.tensor_par, 1)) == 0
+
+
+def _quantize_moe(moe_params: dict, qcfg: QuantizeConfig, cfg: ArchConfig,
+                  calib: Optional[dict]) -> dict:
+    out = dict(moe_params)
+    if "shared" in moe_params:
+        out["shared"] = {
+            k: (_pack_stacked(v, qcfg.wspec, qcfg.a_bits,
+                              _maybe_calib(calib, "moe", "shared", k))
+                if k in _MLP_LINEARS else v)
+            for k, v in moe_params["shared"].items()
+        }
+    if qcfg.quantize_moe_experts and _expert_ff_packable(cfg, qcfg):
+        # (L, E, K, N) or (E, K, N): vmap pack over all leading axes
+        for k in ("w_gate", "w_up", "w_down"):
+            w = moe_params[k]
+            pack = lambda m: _pack_one(m, qcfg.wspec, None)
+            for _ in range(w.ndim - 2):
+                pack = jax.vmap(pack)
+            q = pack(w)
+            out[k] = QuantLinear(q.pw, q.act_inv_s, qcfg.a_bits)
+    # router always fp (accuracy-critical, tiny)
+    return out
+
+
+def quantize_model(params: dict, cfg: ArchConfig, qcfg: QuantizeConfig,
+                   calib: Optional[dict] = None) -> dict:
+    """fp param tree -> serve-path tree. ``calib`` mirrors the blocks tree."""
+    out: dict[str, Any] = {}
+    for name, val in params.items():
+        if name in ("blocks", "self_blocks", "cross_blocks"):
+            out[name] = quantize_block_tree(
+                val, qcfg, cfg, _maybe_calib(calib, name))
+        elif name == "shared_attn":
+            out[name] = quantize_block_tree(
+                val, qcfg, cfg, _maybe_calib(calib, name))
+        elif name == "lm_head" and qcfg.quantize_lm_head:
+            out[name] = _pack_stacked(val, qcfg.wspec, qcfg.a_bits)
+        elif name == "heads" and qcfg.quantize_lm_head:
+            # audio: (n_cb, D, V)
+            q = jax.vmap(lambda m: _pack_one(m, qcfg.wspec, None))(val)
+            out[name] = QuantLinear(q.pw, q.act_inv_s, qcfg.a_bits)
+        else:
+            out[name] = val
+    return out
+
+
+def quantized_bytes(tree) -> int:
+    """Total weight bytes of a (possibly quantized) param tree."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

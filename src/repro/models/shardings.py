@@ -1,0 +1,207 @@
+"""Physical PartitionSpecs for every param / cache / batch tree.
+
+Path-based rules (MaxText-style logical->physical): the weight's role is
+identified by its leaf name, the stacked-layer axis by its subtree root.
+Quantized trees (QuantLinear leaves) inherit the base weight's rule with the
+packed-word contraction dim.
+
+fsdp = ("pod","data")-composed axis (weight rows / ZeRO-3);
+tensor = "model" (heads / ff / vocab / experts-ff).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.dist.sharding import ShardingRules, axis_size
+
+# subtree roots whose children are stacked on a leading layer axis
+_STACKED_ROOTS = {"blocks", "self_blocks", "cross_blocks"}
+
+# leaf-name roles
+_ROW_MAJOR = {"wq", "wk", "wv", "w_gate", "w_up", "wz", "wx", "wdt"}  # (d, X)
+_ROW_MAJOR_SMALL = {"wB", "wC"}  # (d, small) — keep out dim replicated
+_COL_MAJOR = {"wo", "w_down", "wout"}  # (X, d)
+_REPLICATED = {
+    "attn_norm", "mlp_norm", "norm", "final_norm", "q_norm", "k_norm",
+    "router", "dt_bias", "A_log", "D", "gate_attn", "gate_mlp",
+    "conv_B", "conv_C",
+}
+
+
+def _spec_for_leaf(path_keys: list[str], shape, rules: ShardingRules,
+                   mesh: Mesh) -> P:
+    fsdp, tp = rules.fsdp, rules.tensor
+    stacked = path_keys[0] in _STACKED_ROOTS
+    prefix = (None,) * (1 if stacked else 0)
+
+    # identify the innermost "weight name" — for QuantLinear leaves the path
+    # ends with .../<wname>/(pw/planes | pw/scale | pw/zero_point | act_inv_s)
+    quant_part = None
+    name = path_keys[-1]
+    if name in ("planes", "scale", "zero_point"):
+        quant_part = name
+        wname = path_keys[-3]  # <wname>/pw/<part>
+    elif name == "act_inv_s":
+        quant_part = name
+        wname = path_keys[-2]
+    else:
+        wname = name
+
+    is_expert = "moe" in path_keys and wname in ("w_gate", "w_up", "w_down") \
+        and "shared" not in path_keys
+    ndim = len(shape)
+    base = ndim - len(prefix)  # dims excluding the stacked-layer axis
+
+    def fits(dim_size, ax):
+        return ax is not None and dim_size % max(axis_size(mesh, ax), 1) == 0
+
+    if quant_part is None:
+        if wname in _REPLICATED or base <= 1:
+            return P(*(prefix + (None,) * base))
+        if is_expert:  # (E, K, N) under the stacked prefix
+            if wname == "w_down":
+                sp = (None,
+                      tp if fits(shape[-2], tp) else None,
+                      fsdp if fits(shape[-1], fsdp) else None)
+            else:
+                sp = (None,
+                      fsdp if fits(shape[-2], fsdp) else None,
+                      tp if fits(shape[-1], tp) else None)
+            return P(*(prefix + sp))
+        if wname == "conv_x":
+            return P(*(prefix + (None, tp if fits(shape[-1], tp) else None)))
+        if wname == "embed":
+            if base == 3:  # audio codebook embeds (n_cb, V, D)
+                return P(None if False else None,
+                         tp if fits(shape[-2], tp) else None,
+                         fsdp if fits(shape[-1], fsdp) else None)
+            return P(tp if fits(shape[-2] if base > 2 else shape[0], tp) else None,
+                     fsdp if fits(shape[-1], fsdp) else None)
+        if wname == "lm_head":
+            return P(fsdp if fits(shape[0], fsdp) else None,
+                     tp if fits(shape[1], tp) else None)
+        if wname == "heads":  # audio (n_cb, D, V)
+            return P(None,
+                     fsdp if fits(shape[-2], fsdp) else None,
+                     tp if fits(shape[-1], tp) else None)
+        if wname in _ROW_MAJOR:
+            sp = (fsdp if fits(shape[-2], fsdp) else None,
+                  tp if fits(shape[-1], tp) else None)
+            return P(*(prefix + sp))
+        if wname in _ROW_MAJOR_SMALL:
+            sp = (fsdp if fits(shape[-2], fsdp) else None, None)
+            return P(*(prefix + sp))
+        if wname in _COL_MAJOR:
+            sp = (tp if fits(shape[-2], tp) else None,
+                  fsdp if fits(shape[-1], fsdp) else None)
+            return P(*(prefix + sp))
+        # default: replicate
+        return P(*((None,) * ndim))
+
+    # ---- quantized leaves ----
+    # planes: (..., P, Kw, N) — shard only (Kw, N); scale/zp: (..., 1, N) —
+    # shard only N; act_inv_s: (..., K) replicated (small).
+    col = wname in _COL_MAJOR or (is_expert and wname == "w_down")
+    if quant_part == "planes":
+        lead = (None,) * (ndim - 2)
+        if col:  # contraction (rows) was tensor-sharded
+            return P(*(lead + (tp if fits(shape[-2], tp) else None,
+                               fsdp if fits(shape[-1], fsdp) else None)))
+        return P(*(lead + (fsdp if fits(shape[-2], fsdp) else None,
+                           tp if fits(shape[-1], tp) else None)))
+    if quant_part in ("scale", "zero_point"):
+        lead = (None,) * (ndim - 1)
+        if col:
+            return P(*(lead + (fsdp if fits(shape[-1], fsdp) else None,)))
+        return P(*(lead + (tp if fits(shape[-1], tp) else None,)))
+    # act_inv_s (K,): replicate (small)
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(params: Any, cfg: ArchConfig, rules: ShardingRules,
+                 mesh: Mesh) -> Any:
+    """PartitionSpec tree matching ``params``."""
+    rules = rules.resolve(mesh)
+
+    def walk(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+        return _spec_for_leaf(keys, leaf.shape, rules, mesh)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def param_shardings(params, cfg, rules, mesh) -> Any:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params, cfg, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch: dict, rules: ShardingRules, mesh: Mesh) -> dict:
+    rules = rules.resolve(mesh)
+    bt = rules.batch
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if bt is not None and leaf.shape[0] % max(axis_size(mesh, bt), 1) == 0:
+            return P(*((bt,) + (None,) * (leaf.ndim - 1)))
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(cache: dict, cfg: ArchConfig, rules: ShardingRules,
+                 mesh: Mesh) -> dict:
+    """Decode-cache specs: batch over dp when divisible, kv-heads / d_inner
+    over tensor. Cache layout (lm.init_cache, attention-native):
+      attn/cross: values (L, B, KVH, S, hd) + scales (L, B, KVH, S)
+      ssm: conv_x (L,B,W-1,din) conv_B/C (L,B,W-1,ns) state (L,B,H,ns,hd)
+      pos: scalar
+    """
+    rules = rules.resolve(mesh)
+    bt, tp = rules.batch, rules.tensor
+
+    def fits(n, ax):
+        return ax is not None and n % max(axis_size(mesh, ax), 1) == 0
+
+    def spec_path(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if leaf.ndim == 0:
+            return P()
+        b_ax = bt if fits(leaf.shape[1], bt) else None
+        if "attn" in keys or "cross" in keys:
+            head_ax = tp if fits(leaf.shape[2], tp) else None
+            if leaf.ndim == 4:  # scales (L, B, KVH, S)
+                return P(None, b_ax, head_ax, None)
+            return P(None, b_ax, head_ax, None, None)
+        if "ssm" in keys:
+            name = keys[-1]
+            if name == "conv_x":
+                return P(None, b_ax, None, tp if fits(leaf.shape[-1], tp) else None)
+            if name == "state":
+                return P(None, b_ax, tp if fits(leaf.shape[2], tp) else None,
+                         None, None)
+            return P(*((None, b_ax) + (None,) * (leaf.ndim - 2)))
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_path, cache)

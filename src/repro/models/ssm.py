@@ -1,0 +1,299 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like math
+inside chunks of length Q, a linear recurrence across chunks (lax.scan), so
+compute is O(S·Q) and the materialized score block is (Q × Q) — this is the
+sub-quadratic path that makes the long_500k shape feasible.
+
+Decode is the O(1) recurrent form over the (H, P, N) state.
+
+Layout follows the Mamba2 reference: d_inner = expand·d, heads H = d_inner/P
+(P = headdim), n_groups = 1, state N = cfg.ssm_state. The input projection is
+split into separate weight matrices (z, x, B, C, dt) instead of one fused
+matrix so tensor-parallel sharding stays clean (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import apply_linear, dense_init, rms_norm
+
+Array = jax.Array
+
+
+def init_ssm_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    nh = cfg.ssm_heads
+    ns = cfg.ssm_state
+    ks = jax.random.split(key, 10)
+    # dt init: log-uniform in [1e-3, 1e-1], stored through inverse softplus
+    dt0 = jnp.exp(
+        jax.random.uniform(ks[5], (nh,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    return {
+        "wz": dense_init(ks[0], (d, din), dtype),
+        "wx": dense_init(ks[1], (d, din), dtype),
+        "wB": dense_init(ks[2], (d, ns), dtype),
+        "wC": dense_init(ks[3], (d, ns), dtype),
+        "wdt": dense_init(ks[4], (d, nh), dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt0)),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[6], (nh,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        # separate depthwise convs per stream (x / B / C) so the x-conv
+        # shards cleanly over the tensor axis while B/C stay replicated
+        "conv_x": (jax.random.normal(ks[7], (cfg.ssm_conv, din), jnp.float32)
+                   * cfg.ssm_conv**-0.5).astype(dtype),
+        "conv_B": (jax.random.normal(ks[9], (cfg.ssm_conv, ns), jnp.float32)
+                   * cfg.ssm_conv**-0.5).astype(dtype),
+        "conv_C": (jax.random.normal(ks[9], (cfg.ssm_conv, ns), jnp.float32)
+                   * cfg.ssm_conv**-0.5).astype(dtype),
+        "norm": jnp.ones((din,), dtype),
+        "wout": dense_init(ks[8], (din, d), dtype),
+    }
+
+
+def _causal_conv(u: Array, w: Array, state: Optional[Array] = None):
+    """Depthwise causal conv, width W, as W shifted adds.
+
+    u: (B, S, C); w: (W, C). Returns (y, new_state) where state holds the
+    last W-1 inputs for decode continuation.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    s = u.shape[1]
+    for i in range(width):
+        y = y + ext[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = ext[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(y).astype(u.dtype), new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, return_state: bool = False,
+                 unroll: bool = False):
+    """Chunked SSD: one lax.scan over chunks carrying the (H, N, P) state.
+
+    Per chunk (length q): the intra-chunk quadratic part materializes only a
+    (B, q, q, H) decay-weighted score block (the SSD analogue of a flash
+    attention tile), the inter-chunk part applies the carried state, and the
+    chunk's contribution updates the state for the next step. Memory is
+    O(B·q²·H) regardless of S — the sub-quadratic property the long_500k
+    shape depends on.
+
+    xh: (B, S, H, P); dt: (B, S, H); A: (H,) negative; Bm/Cm: (B, S, N).
+    Returns y: (B, S, H, P) in fp32.
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s) if s >= 1 else chunk
+    pad = (-s) % q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    # chunk-major scan inputs: (nc, B, q, ...)
+    xh_c = xh.astype(jnp.float32).reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dt_c = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    Bm_c = Bm.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    Cm_c = Cm.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def scan_fn(h_prev, inp):
+        xc, dtc, bc, cc = inp  # (B,q,H,P), (B,q,H), (B,q,N), (B,q,N)
+        la = dtc * A[None, None, :]  # (B,q,H), <= 0
+        cs = jnp.cumsum(la, axis=1)
+        # intra-chunk: L[s,t] = exp(cs_s - cs_t) · 1[s>=t]
+        diff = cs[:, :, None, :] - cs[:, None, :, :]  # (B,q,q,H)
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqn,btn->bqt", cc, bc)
+        dx = dtc[..., None] * xc  # (B,q,H,P)
+        y_intra = jnp.einsum("bqt,bqth,bthp->bqhp", cb, lmat, dx)
+        # inter-chunk: apply carried state
+        dec_from_start = jnp.exp(cs)  # (B,q,H)
+        y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp", cc, dec_from_start, h_prev)
+        # state update: h <- exp(sum la) h + sum_t exp(cs_end - cs_t) dt_t B_t⊗x_t
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)  # (B,q,H)
+        st = jnp.einsum("bqn,bqh,bqhp->bhnp", bc, decay_to_end * dtc, xc)
+        h_new = h_prev * jnp.exp(cs[:, -1, :])[:, :, None, None] + st
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    h_final, y_c = jax.lax.scan(scan_fn, h0, (xh_c, dt_c, Bm_c, Cm_c),
+                                unroll=unroll)
+    y = y_c.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, p)
+    if return_state:
+        # padded steps carry dt=0 -> decay 1, zero contribution, so h_final
+        # is exactly the state after the last real token.
+        return y[:, :s], h_final
+    return y[:, :s]
+
+
+def ssm_forward(
+    params: dict,
+    x: Array,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+    shard=None,
+    unroll: bool = False,
+) -> Array:
+    """Full-sequence Mamba2 block core (pre-norm residual handled by caller)."""
+    b, s, _ = x.shape
+    sh = shard or (lambda t, *l: t)
+    nh, p, ns = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = sh(apply_linear(x, params["wz"], backend=backend, interpret=interpret),
+           "batch", None, "tensor")
+    xs = sh(apply_linear(x, params["wx"], backend=backend, interpret=interpret),
+            "batch", None, "tensor")
+    Bm = sh(apply_linear(x, params["wB"], backend=backend, interpret=interpret),
+            "batch", None, None)
+    Cm = sh(apply_linear(x, params["wC"], backend=backend, interpret=interpret),
+            "batch", None, None)
+    dt_raw = sh(apply_linear(x, params["wdt"], backend=backend,
+                             interpret=interpret), "batch", None, "tensor")
+
+    xs, _ = _causal_conv(xs, params["conv_x"])
+    Bm, _ = _causal_conv(Bm, params["conv_B"])
+    Cm, _ = _causal_conv(Cm, params["conv_C"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = sh(xs.reshape(b, s, nh, p), "batch", None, "tensor", None)
+    y = _ssd_chunked(xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                     cfg.ssm_chunk, unroll=unroll)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = sh(y.reshape(b, s, cfg.d_inner).astype(x.dtype), "batch", None, "tensor")
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return apply_linear(y, params["wout"], backend=backend, interpret=interpret)
+
+
+def ssm_forward_with_state(
+    params: dict,
+    x: Array,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+    shard=None,
+    unroll: bool = False,
+):
+    """Full-sequence forward that also returns the decode cache for this
+    layer: conv tails (last W−1 raw conv inputs) + final SSD state. Used by
+    prefill so decode can continue exactly where the prompt ended."""
+    b, s, _ = x.shape
+    sh = shard or (lambda t, *l: t)
+    nh, p, ns = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = sh(apply_linear(x, params["wz"], backend=backend, interpret=interpret),
+           "batch", None, "tensor")
+    xs_raw = sh(apply_linear(x, params["wx"], backend=backend,
+                             interpret=interpret), "batch", None, "tensor")
+    Bm_raw = apply_linear(x, params["wB"], backend=backend, interpret=interpret)
+    Cm_raw = apply_linear(x, params["wC"], backend=backend, interpret=interpret)
+    dt_raw = sh(apply_linear(x, params["wdt"], backend=backend,
+                             interpret=interpret), "batch", None, "tensor")
+
+    xs, cx = _causal_conv(xs_raw, params["conv_x"])
+    Bm, cB = _causal_conv(Bm_raw, params["conv_B"])
+    Cm, cC = _causal_conv(Cm_raw, params["conv_C"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = sh(xs.reshape(b, s, nh, p), "batch", None, "tensor", None)
+    y, h_final = _ssd_chunked(
+        xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        cfg.ssm_chunk, return_state=True, unroll=unroll,
+    )
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = apply_linear(y, params["wout"], backend=backend, interpret=interpret)
+    state = {
+        "conv_x": cx.astype(x.dtype),
+        "conv_B": cB.astype(x.dtype),
+        "conv_C": cC.astype(x.dtype),
+        "state": h_final,
+    }
+    return out, state
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, n_layers: Optional[int] = None,
+                   dtype=jnp.bfloat16) -> dict:
+    ell = cfg.n_layers if n_layers is None else n_layers
+    w1 = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((ell, batch, w1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((ell, batch, w1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((ell, batch, w1, cfg.ssm_state), dtype),
+        "state": jnp.zeros(
+            (ell, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+            jnp.float32,
+        ),
+    }
+
+
+def ssm_decode(
+    params: dict,
+    x: Array,
+    layer_cache: dict,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+):
+    """One-token recurrent step. x: (B, 1, D); cache: conv_[xBC] (B,W-1,·),
+    state (B,H,N,P). Returns (out (B,1,D), new layer_cache)."""
+    b = x.shape[0]
+    nh, p, ns = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = apply_linear(x, params["wz"], backend=backend, interpret=interpret)
+    xs = apply_linear(x, params["wx"], backend=backend, interpret=interpret)
+    Bm = apply_linear(x, params["wB"], backend=backend, interpret=interpret)
+    Cm = apply_linear(x, params["wC"], backend=backend, interpret=interpret)
+    dt_raw = apply_linear(x, params["wdt"], backend=backend, interpret=interpret)
+
+    xs, ncx = _causal_conv(xs, params["conv_x"], state=layer_cache["conv_x"])
+    Bm, ncB = _causal_conv(Bm, params["conv_B"], state=layer_cache["conv_B"])
+    Cm, ncC = _causal_conv(Cm, params["conv_C"], state=layer_cache["conv_C"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # (B, H)
+    xh = xs.reshape(b, nh, p).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)  # (B, N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    # h <- decay h + dt * B ⊗ x
+    h_new = (
+        layer_cache["state"] * decay[:, :, None, None]
+        + dt[:, :, None, None] * Bv[:, None, :, None] * xh[:, :, None, :]
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cv, h_new)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = apply_linear(y, params["wout"], backend=backend, interpret=interpret)
+    return out, {
+        "conv_x": ncx.astype(layer_cache["conv_x"].dtype),
+        "conv_B": ncB.astype(layer_cache["conv_B"].dtype),
+        "conv_C": ncC.astype(layer_cache["conv_C"].dtype),
+        "state": h_new,
+    }

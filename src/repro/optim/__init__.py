@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWConfig, global_norm, init, update
+from repro.optim.schedule import constant, cosine_with_warmup
+
+__all__ = [
+    "AdamWConfig",
+    "constant",
+    "cosine_with_warmup",
+    "global_norm",
+    "init",
+    "update",
+]

@@ -1,0 +1,96 @@
+"""AdamW, pure-functional, with dtype-configurable moments and per-leaf LRs.
+
+Used both for model training (bf16 moments at 100B+ scale — see DESIGN.md §4)
+and for the paper's block-wise calibration (§4.1: AdamW, no weight decay,
+lr 5e-3 for balance vectors / 1e-2 for clipping + compensation — expressed
+here as a per-leaf learning-rate pytree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    moment_dtype: Optional[str] = None  # None -> param dtype; "bfloat16" at scale
+    grad_clip_norm: Optional[float] = None
+
+
+def init(params: PyTree, cfg: AdamWConfig) -> PyTree:
+    def make_moment(p):
+        dt = p.dtype if cfg.moment_dtype is None else jnp.dtype(cfg.moment_dtype)
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": jax.tree.map(make_moment, params),
+        "v": jax.tree.map(make_moment, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def update(
+    grads: PyTree,
+    state: PyTree,
+    params: PyTree,
+    cfg: AdamWConfig,
+    lr_scale: Union[float, Array] = 1.0,
+    lr_tree: Optional[PyTree] = None,
+) -> tuple[PyTree, PyTree]:
+    """One AdamW step. ``lr_tree`` (if given) holds a per-leaf LR that
+    overrides cfg.lr; ``lr_scale`` multiplies either (schedules)."""
+    step = state["step"] + 1
+    if cfg.grad_clip_norm is not None:
+        gn = global_norm(grads)
+        clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * clip, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, lr):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * lr_scale * step_
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    if lr_tree is None:
+        lr_tree = jax.tree.map(lambda _: cfg.lr, params)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_lr = treedef.flatten_up_to(lr_tree)
+
+    out = [upd(g, m, v, p, lr) for g, m, v, p, lr in zip(flat_g, flat_m, flat_v, flat_p, flat_lr)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

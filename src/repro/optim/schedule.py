@@ -1,0 +1,19 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, *, base_lr: float, warmup: int, total: int,
+                       final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac * base_lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * (final_frac + (1 - final_frac) * cos)
+
+
+def constant(step, *, base_lr: float):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), base_lr)

@@ -1,0 +1,56 @@
+import os
+
+# Tests run on the real (single-CPU) device topology. Only the dry-run and
+# the dedicated sharding tests use placeholder devices, in subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ArchConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+TINY = {
+    "dense": ArchConfig(name="t-dense", family="dense", n_layers=2, d_model=64,
+                        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                        qk_norm=True),
+    "moe": ArchConfig(name="t-moe", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+                      n_experts=4, top_k=2, n_shared_experts=1, moe_d_ff=64),
+    "ssm": ArchConfig(name="t-ssm", family="ssm", n_layers=3, d_model=64,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=256,
+                      ssm_state=16, ssm_headdim=16, ssm_chunk=8),
+    "hybrid": ArchConfig(name="t-hybrid", family="hybrid", n_layers=5,
+                         d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                         vocab_size=256, ssm_state=16, ssm_headdim=16,
+                         ssm_chunk=8, shared_attn_every=2),
+    "vlm": ArchConfig(name="t-vlm", family="vlm", n_layers=4, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      cross_attn_every=2, n_image_tokens=8),
+    "audio": ArchConfig(name="t-audio", family="audio", n_layers=2, d_model=64,
+                        n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                        n_codebooks=4),
+}
+
+
+@pytest.fixture(params=list(TINY))
+def tiny_cfg(request):
+    cfg = TINY[request.param]
+    cfg.validate()
+    return cfg
+
+
+def tiny(family: str) -> ArchConfig:
+    return TINY[family]

@@ -1,0 +1,116 @@
+"""ABQ calibration mechanics (the paper's PTQ loop, CPU-sized)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibration import (
+    CalibConfig,
+    block_apply_fq,
+    calibrate_block,
+    calibrate_model,
+    init_block_qstate,
+    lr_tree_for,
+    smoothquant_s_init,
+    stack_qstates,
+)
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from conftest import tiny
+
+
+def test_qstate_structure_uniform_across_blocks(key):
+    """Edge and middle blocks must produce identical qstate STRUCTURE so
+    per-block states stack (compensation frozen, not absent, mid-stack)."""
+    cfg = tiny("dense")
+    params = lm.init_params(key, cfg)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    st_edge = init_block_qstate(bp, edge_block=True)
+    st_mid = init_block_qstate(bp, edge_block=False)
+    assert jax.tree.structure(st_edge) == jax.tree.structure(st_mid)
+    assert "comp_a" in st_edge["mlp"]["w_down"]
+    stacked = stack_qstates([st_edge, st_mid])
+    assert stacked["mlp"]["w_down"]["comp_a"].shape[0] == 2
+
+
+def test_lr_tree_freezes_compensation_mid_stack(key):
+    cfg = tiny("dense")
+    params = lm.init_params(key, cfg)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    st = init_block_qstate(bp, edge_block=False)
+    ccfg = CalibConfig()
+    lrs = lr_tree_for(st, ccfg, edge_block=False)
+    assert lrs["mlp"]["w_down"]["comp_a"] == 0.0
+    assert lrs["mlp"]["w_down"]["log_s"] == ccfg.lr_balance
+    assert lrs["attn"]["wq"]["alpha_raw"] == ccfg.lr_clip
+    lrs_e = lr_tree_for(st, ccfg, edge_block=True)
+    assert lrs_e["mlp"]["w_down"]["comp_a"] == ccfg.lr_clip
+
+
+def test_fq_block_matches_fp_at_high_bits(key):
+    """W8A8 fake-quant block output ~= fp block output."""
+    cfg = tiny("dense")
+    params = lm.init_params(key, cfg)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    ccfg = CalibConfig(w_bits=8, a_bits=8)
+    st = init_block_qstate(bp, edge_block=False)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32) * 0.3
+    y_q, attn_q = block_apply_fq(bp, st, x, cfg, ccfg, quant=True)
+    y_fp, attn_fp = block_apply_fq(bp, None, x, cfg, ccfg, quant=False)
+    rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.05
+    assert attn_q.shape == attn_fp.shape
+
+
+def test_calibrate_block_reduces_loss(key):
+    cfg = tiny("dense")
+    params = lm.init_params(key, cfg)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    ccfg = CalibConfig(w_bits=3, a_bits=8, epochs=8)
+    x = jax.random.normal(key, (2, 2, 16, cfg.d_model), jnp.float32) * 0.3
+
+    from repro.core.losses import dlc_loss
+
+    def eval_loss(qs):
+        y_q, _ = block_apply_fq(bp, qs, x[0], cfg, ccfg, quant=True)
+        y_fp, _ = block_apply_fq(bp, None, x[0], cfg, ccfg, quant=False)
+        return float(dlc_loss(y_q.astype(jnp.float32),
+                              y_fp.astype(jnp.float32),
+                              y_fp.astype(jnp.float32)))
+
+    st0 = init_block_qstate(bp, edge_block=True)
+    before = eval_loss(st0)
+    st, _, _ = calibrate_block(bp, x, x, cfg, ccfg, edge_block=True)
+    after = eval_loss(st)
+    assert after < before, f"calibration did not reduce DLC: {before}->{after}"
+
+
+def test_calibrate_model_end_to_end_mechanics(key):
+    cfg = tiny("ssm")  # attention-free branch: DLC only (AKL inapplicable)
+    params = lm.init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 1, 16), 0, cfg.vocab_size)
+    states = calibrate_model(params, toks, cfg,
+                             CalibConfig(w_bits=4, a_bits=8, epochs=1))
+    assert len(states) == cfg.n_layers
+    stacked = stack_qstates(states)
+    assert stacked["ssm"]["wx"]["log_s"].shape == (cfg.n_layers, cfg.d_model)
+
+    # packs into a servable tree
+    from repro.models.quantized import QuantizeConfig, quantize_model
+
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8,
+                                                    bit_balance=False),
+                        calib={"blocks": stacked})
+    ctx = ModelContext(cfg=cfg, remat=False)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    logits, _ = lm.prefill(qp, tokens, cfg, ctx, max_len=20)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_smoothquant_init_balances_scales():
+    act_amax = jnp.asarray([10.0, 0.1, 1.0])
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(3, 4)), jnp.float32)
+    s = smoothquant_s_init(act_amax, w)
+    # outlier activation channel gets the largest weight-side multiplier
+    assert float(s[0]) > float(s[2]) > float(s[1])

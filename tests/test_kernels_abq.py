@@ -1,0 +1,128 @@
+"""ABQ GEMM Pallas kernel vs the pure-jnp oracle: shape/dtype/bit sweeps.
+
+Everything runs in interpret mode on CPU (the kernel body executes in
+Python), asserting exact agreement for the integer pipeline (the math is
+exact in int32) and allclose for the fp epilogue.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, act_scales, pack_weight, quantize_act
+from repro.kernels import ref as R
+from repro.kernels.abq_matmul import abq_matmul_pallas
+from repro.kernels import ops as O
+
+
+def _mk(rng, m, k, n, w_bits, bb, a_bits=8):
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    wspec = QuantSpec(bits=w_bits, bit_balance=bb)
+    pw = pack_weight(w, wspec)
+    aspec = QuantSpec(bits=a_bits, symmetric=True, granularity="per_token")
+    xs = act_scales(x, aspec)
+    xq = quantize_act(x, xs, aspec)
+    return xq, xs, pw, w
+
+
+@pytest.mark.parametrize("w_bits,bb", [(1, False), (2, False), (2, True),
+                                       (3, False), (4, False), (8, False)])
+def test_abq_kernel_bit_sweep(rng, w_bits, bb):
+    xq, xs, pw, _ = _mk(rng, 32, 256, 128, w_bits, bb)
+    y_ref = R.abq_matmul_ref(xq, xs, pw.planes, pw.scale, pw.zero_point, 256,
+                             out_dtype=jnp.float32)
+    y_pal = abq_matmul_pallas(xq, xs, pw.planes, pw.scale, pw.zero_point,
+                              block_m=32, block_n=128, block_k=128,
+                              out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (1, 128, 128, 8, 128, 128),     # decode GEMV shape
+    (7, 96, 256, 16, 128, 32),      # M padding + small K blocks
+    (64, 512, 128, 32, 128, 256),   # multi-step K accumulation
+    (100, 224, 384, 64, 128, 224),  # K not multiple of block... clamps
+])
+def test_abq_kernel_shape_sweep(rng, m, k, n, bm, bn, bk):
+    xq, xs, pw, _ = _mk(rng, m, k, n, 2, True)
+    kp = pw.planes.shape[1] * 32
+    xq_p = jnp.pad(xq, ((0, 0), (0, kp - k)))
+    y_ref = R.abq_matmul_ref(xq_p, xs, pw.planes, pw.scale, pw.zero_point, kp,
+                             out_dtype=jnp.float32)
+    bk = min(bk, kp)
+    while kp % bk:
+        bk -= 32
+    y_pal = abq_matmul_pallas(xq_p, xs, pw.planes, pw.scale, pw.zero_point,
+                              block_m=bm, block_n=bn, block_k=bk,
+                              out_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_abq_kernel_dtype_sweep(rng, out_dtype):
+    xq, xs, pw, _ = _mk(rng, 16, 128, 128, 4, False)
+    y_ref = R.abq_matmul_ref(xq, xs, pw.planes, pw.scale, pw.zero_point, 128,
+                             out_dtype=out_dtype)
+    y_pal = abq_matmul_pallas(xq, xs, pw.planes, pw.scale, pw.zero_point,
+                              block_m=16, block_n=128, block_k=128,
+                              out_dtype=out_dtype, interpret=True)
+    assert y_pal.dtype == out_dtype
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2 if out_dtype == jnp.bfloat16 else 1e-6,
+                               atol=1e-2)
+
+
+def test_abq_matches_exact_integer_dequant(rng):
+    """End-to-end identity: ABQ output == dequant(W) @ dequant(X) exactly."""
+    from repro.core import dequantize_weight, weight_scales, quantize_weight
+
+    xq, xs, pw, w = _mk(rng, 24, 160, 128, 3, False)
+    spec = QuantSpec(bits=3)
+    sc, zp = weight_scales(w, spec)
+    q = quantize_weight(w, sc, zp, spec)
+    w_deq = dequantize_weight(q, sc, zp, spec)
+    y_exact = (xq.astype(jnp.float32) * xs) @ w_deq
+    kp = pw.planes.shape[1] * 32
+    y_abq = R.abq_matmul_ref(jnp.pad(xq, ((0, 0), (0, kp - 160))), xs,
+                             pw.planes, pw.scale, pw.zero_point, kp,
+                             out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_abq), np.asarray(y_exact),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ops_wrapper_backend_equivalence(rng):
+    """ops.abq_matmul xla path == pallas path == ref."""
+    xq, xs, pw, _ = _mk(rng, 10, 96, 128, 2, True)
+    y_xla = O.abq_matmul(xq, xs, pw, backend="xla", out_dtype=jnp.float32)
+    y_pal = O.abq_matmul(xq, xs, pw, backend="pallas", interpret=True,
+                         out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pal),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_abq_linear_quant_error_small_at_w8a8(rng):
+    w = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    pw = pack_weight(w, QuantSpec(bits=8))
+    y = O.abq_linear(x, pw, act_bits=8, backend="xla", out_dtype=jnp.float32)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 2e-2
+
+
+def test_grouped_ref_matches_per_channel_when_uniform(rng):
+    """g128 with a single group == per-channel on that group."""
+    xq, xs, pw, w = _mk(rng, 8, 128, 128, 4, False)
+    y_pc = R.abq_matmul_ref(xq, xs, pw.planes, pw.scale, pw.zero_point, 128,
+                            out_dtype=jnp.float32)
+    spec_g = QuantSpec(bits=4, granularity="per_group", group_size=128)
+    pw_g = pack_weight(w, spec_g)
+    y_g = R.abq_matmul_grouped_ref(
+        xq, xs, pw_g.planes, pw_g.scale, pw_g.zero_point, 128, 128,
+        out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_pc),
+                               rtol=1e-5, atol=1e-4)

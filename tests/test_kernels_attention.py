@@ -1,0 +1,107 @@
+"""Flash-attention Pallas kernel + act_quant kernel vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.act_quant import act_quant_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ops import _flash_xla, decode_attention
+
+
+def _qkv(rng, b, sq, skv, h, kvh, d, dtype=np.float32):
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(dtype)) * 0.3
+    k = jnp.asarray(rng.normal(size=(b, skv, kvh, d)).astype(dtype)) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, skv, kvh, d)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kvh,d,bq,bk", [
+    (1, 128, 4, 4, 64, 64, 64),    # MHA
+    (2, 256, 8, 2, 64, 64, 128),   # GQA 4:1
+    (2, 192, 8, 1, 32, 64, 64),    # MQA
+    (1, 128, 4, 4, 128, 128, 32),  # wide head, small kv blocks
+])
+def test_flash_kernel_shape_sweep(rng, b, s, h, kvh, d, bq, bk):
+    q, k, v = _qkv(rng, b, s, s, h, kvh, d)
+    o_ref = R.flash_attention_ref(q, k, v, causal=True)
+    o_pal = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                   block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_kernel_noncausal(rng):
+    q, k, v = _qkv(rng, 2, 128, 128, 4, 2, 64)
+    o_ref = R.flash_attention_ref(q, k, v, causal=False)
+    o_pal = flash_attention_pallas(q, k, v, causal=False, block_q=64,
+                                   block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_kernel_cross_lengths(rng):
+    """Decode-style: short q against long kv with offset."""
+    q, k, v = _qkv(rng, 2, 64, 256, 4, 4, 64)
+    o_ref = R.flash_attention_ref(q, k, v, causal=True, q_offset=192)
+    o_pal = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, q_offset=192, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_xla_path_matches_ref(rng):
+    q, k, v = _qkv(rng, 2, 160, 160, 8, 2, 64)
+    o_ref = R.flash_attention_ref(q, k, v, causal=True)
+    o_xla = _flash_xla(q, k, v, True, 1 / 8.0, 0, block_k=64, block_q=64)
+    np.testing.assert_allclose(np.asarray(o_xla), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _qkv(rng, 1, 128, 128, 4, 4, 64)
+    q, k, v = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    o_ref = R.flash_attention_ref(q, k, v, causal=True)
+    o_pal = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_decode_attention_int8_kv(rng):
+    q, k, v = _qkv(rng, 2, 1, 256, 8, 4, 64)
+    from repro.models.attention import quantize_kv_cached
+
+    kq, ks, vq, vs = quantize_kv_cached(k, v)
+    o = decode_attention(q, kq, vq, ks, vs,
+                         length=jnp.full((2,), 256, jnp.int32))
+    o_ref = R.flash_attention_ref(q, k, v, causal=True, q_offset=255)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=5e-2, atol=1e-2)  # int8 KV+attn budget
+
+
+def test_decode_attention_length_mask(rng):
+    """Entries past `length` must not contribute."""
+    q, k, v = _qkv(rng, 1, 1, 64, 4, 4, 32)
+    from repro.models.attention import quantize_kv_cached
+
+    kq, ks, vq, vs = quantize_kv_cached(k, v)
+    o_full = decode_attention(q, kq, vq, ks, vs,
+                              length=jnp.asarray([32]))
+    # poison the masked tail (seq axis 2 in cache layout); output unchanged
+    kq2 = kq.at[:, :, 32:].set(127)
+    vq2 = vq.at[:, :, 32:].set(127)
+    o_poison = decode_attention(q, kq2, vq2, ks, vs,
+                                length=jnp.asarray([32]))
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_poison))
+
+
+@pytest.mark.parametrize("m,d", [(4, 64), (33, 128), (256, 32)])
+def test_act_quant_kernel(rng, m, d):
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32)) * 5
+    q_ref, s_ref = R.act_quant_ref(x)
+    q_pal, s_pal = act_quant_pallas(x, block_m=16, interpret=True)
+    assert np.array_equal(np.asarray(q_pal), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref), rtol=1e-6)

@@ -1,0 +1,148 @@
+"""Model-family behaviour tests: train/prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from conftest import tiny
+
+
+def _batch(cfg, key, b=2, s=32):
+    ts = (b, s, cfg.n_codebooks) if cfg.family == "audio" else (b, s)
+    tokens = jax.random.randint(key, ts, 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16) * 0.05
+    return batch
+
+
+def test_all_families_train_loss_finite(tiny_cfg, key):
+    ctx = ModelContext(cfg=tiny_cfg, remat=True)
+    params = lm.init_params(key, tiny_cfg)
+    batch = _batch(tiny_cfg, key)
+    loss, metrics = lm.loss_fn(params, batch, tiny_cfg, ctx, n_loss_chunks=4)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: lm.loss_fn(p, batch, tiny_cfg, ctx)[0])(params)
+    norms = [float(jnp.linalg.norm(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads)]
+    assert all(np.isfinite(n) for n in norms)
+    assert sum(norms) > 0
+
+
+def test_all_families_prefill_decode(tiny_cfg, key):
+    cfg = tiny_cfg
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, cache = lm.prefill(params, batch["tokens"], cfg, ctx, max_len=40,
+                               image_embeds=batch.get("image_embeds"))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    nt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = lm.decode_step(params, cache, nt, cfg, ctx)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_prefill_decode_matches_full_forward(family, key):
+    """Teacher-forced decode after prefill must agree with a single long
+    forward pass (the cache carries exactly the right state)."""
+    cfg = tiny(family)
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(key, cfg, dtype=jnp.float32)
+    b, s_total, s_prompt = 2, 24, 16
+    tokens = jax.random.randint(key, (b, s_total), 0, cfg.vocab_size)
+
+    # ground truth: last-position logits of the full forward at each step
+    h_full, _ = lm.forward_hidden(params, tokens, cfg, ctx)
+    from repro.models.layers import rms_norm
+    from repro.models.loss import logits_last_token
+
+    h_full = rms_norm(h_full, params["final_norm"], cfg.norm_eps)
+    full_logits = [
+        logits_last_token(h_full[:, t:t + 1], lm.lm_head_weight(params, cfg),
+                          ctx.shard)
+        for t in range(s_prompt - 1, s_total - 1)
+    ]
+
+    logits, cache = lm.prefill(params, tokens[:, :s_prompt], cfg, ctx,
+                               max_len=s_total + 1)
+    outs = [logits]
+    for t in range(s_prompt, s_total - 1):
+        logits, cache = lm.decode_step(params, cache, tokens[:, t:t + 1],
+                                       cfg, ctx)
+        outs.append(logits)
+
+    for i, (a, b_) in enumerate(zip(outs, full_logits)):
+        diff = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b_.astype(jnp.float32))))
+        # int8 KV cache introduces small error for attention families
+        tol = 0.15 if family in ("dense", "hybrid") else 2e-2
+        assert diff < tol, f"{family} step {i}: decode/forward diverged {diff}"
+
+
+def test_moe_routing_covers_topk(key):
+    from repro.models import moe as moe_mod
+
+    cfg = tiny("moe")
+    params = moe_mod.init_moe_params(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    y, aux = moe_mod.moe_ffn(params, x, cfg, mesh=None)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    # aux loss is >= 1 for any routing (E * sum(me*ce) >= 1 at balance)
+    assert float(aux) > 0.5
+
+
+def test_moe_capacity_drop_is_graceful(key):
+    """With capacity_factor near zero most tokens drop; output stays finite
+    and shrinks toward the shared-expert-only contribution."""
+    import dataclasses
+
+    from repro.models import moe as moe_mod
+
+    cfg = dataclasses.replace(tiny("moe"), capacity_factor=0.01)
+    params = moe_mod.init_moe_params(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    y, _ = moe_mod.moe_ffn(params, x, cfg, mesh=None)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_ssm_decode_matches_forward_stepwise(key):
+    """Recurrent decode == chunked SSD on the same sequence, step by step."""
+    from repro.models import ssm as ssm_mod
+
+    cfg = tiny("ssm")
+    p = ssm_mod.init_ssm_params(key, cfg, dtype=jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.3
+    y_full = ssm_mod.ssm_forward(p, x, cfg)
+    cache = {k: v[0] for k, v in
+             ssm_mod.init_ssm_cache(cfg, b, 1, dtype=jnp.float32).items()}
+    outs = []
+    for t in range(s):
+        y_t, cache = ssm_mod.ssm_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_vlm_image_conditioning_matters(key):
+    cfg = tiny("vlm")
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(key, cfg)
+    # gates init at 0 -> tanh(0)=0 -> cross blocks are identity at init;
+    # open the gates to test conditioning
+    params["cross_blocks"]["gate_attn"] = jnp.ones_like(
+        params["cross_blocks"]["gate_attn"])
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    img1 = jax.random.normal(key, (2, 8, cfg.d_model), jnp.bfloat16)
+    img2 = img1 * 3.0 + 1.0
+    h1, _ = lm.forward_hidden(params, tokens, cfg, ctx, image_embeds=img1)
+    h2, _ = lm.forward_hidden(params, tokens, cfg, ctx, image_embeds=img2)
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-3

@@ -1,0 +1,105 @@
+"""Unit tests: quantization grids, bit balance, packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QuantSpec,
+    act_scales,
+    dequantize_weight,
+    fake_quant_act,
+    fake_quant_weight,
+    pack_weight,
+    quantize_act,
+    quantize_weight,
+    unpack_levels,
+    weight_scales,
+)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+def test_weight_roundtrip_error_bound(rng, bits):
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    spec = QuantSpec(bits=bits, granularity="per_channel", channel_axis=1)
+    scale, zp = weight_scales(w, spec)
+    q = quantize_weight(w, scale, zp, spec)
+    wd = dequantize_weight(q, scale, zp, spec)
+    # uniform quantizer: max error <= scale/2 within the clip range
+    assert np.all(np.abs(np.asarray(wd - w)) <= np.asarray(scale) / 2 + 1e-6)
+
+
+def test_bit_balance_levels():
+    """W2* must hit the symmetric level set {-2,-1,0,1,2} (paper §3.3)."""
+    spec = QuantSpec(bits=2, bit_balance=True)
+    assert spec.num_levels == 5
+    assert spec.qmax_abs == 2
+    assert spec.storage_bits == 3
+    w = jnp.asarray(np.linspace(-1, 1, 101, dtype=np.float32).reshape(-1, 1))
+    scale, zp = weight_scales(w, spec)
+    q = quantize_weight(w, scale, zp, spec)
+    signed = np.asarray(q) - float(zp[0, 0])
+    assert set(np.unique(signed)) <= {-2, -1, 0, 1, 2}
+    # symmetric input -> symmetric quantized histogram
+    hist = {v: int(np.sum(signed == v)) for v in (-2, -1, 1, 2)}
+    assert hist[-2] == hist[2] and hist[-1] == hist[1]
+
+
+def test_standard_int2_is_asymmetric():
+    """Plain INT2 has only 4 levels — the asymmetry bit balance fixes."""
+    spec = QuantSpec(bits=2, symmetric=True)
+    assert spec.num_levels == 4
+    assert spec.qmax_abs == 1  # {-1, 0, 1} effective after symmetric clamp
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_act_quant_per_token(rng, bits):
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32)) * 3
+    spec = QuantSpec(bits=bits, symmetric=True, granularity="per_token")
+    s = act_scales(x, spec)
+    q = quantize_act(x, s, spec)
+    assert q.dtype == jnp.int8
+    xd = np.asarray(q, np.float32) * np.asarray(s)
+    assert np.max(np.abs(xd - np.asarray(x))) <= float(np.max(s)) / 2 + 1e-6
+
+
+def test_fake_quant_weight_gradients():
+    """STE: gradients flow to w and to the clipping params."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)), jnp.float32)
+    spec = QuantSpec(bits=4)
+    alpha = jnp.full((8,), 0.9)
+    beta = jnp.full((8,), 0.9)
+
+    def loss(w_, a_, b_):
+        return jnp.sum(jnp.square(fake_quant_weight(w_, spec, a_, b_)))
+
+    gw, ga, gb = jax.grad(loss, argnums=(0, 1, 2))(w, alpha, beta)
+    assert np.isfinite(np.asarray(gw)).all()
+    assert float(jnp.sum(jnp.abs(ga))) > 0
+    assert float(jnp.sum(jnp.abs(gb))) > 0
+
+
+def test_per_group_quantization(rng):
+    w = jnp.asarray(rng.normal(size=(256, 16)).astype(np.float32))
+    # one outlier group should not poison the others' scales
+    w = w.at[:128].mul(10.0)
+    spec_pc = QuantSpec(bits=4, granularity="per_channel", channel_axis=1)
+    spec_pg = QuantSpec(bits=4, granularity="per_group", group_size=128)
+    def err(spec):
+        sc, zp = weight_scales(w, spec)
+        q = quantize_weight(w, sc, zp, spec)
+        return float(jnp.mean(jnp.square(dequantize_weight(q, sc, zp, spec) - w)[128:]))
+    assert err(spec_pg) < err(spec_pc) / 4  # g128 isolates the outlier rows
+
+
+@pytest.mark.parametrize("bits,bb", [(2, False), (2, True), (3, False), (8, False)])
+def test_pack_weight_levels_roundtrip(rng, bits, bb):
+    w = jnp.asarray(rng.normal(size=(96, 16)).astype(np.float32))
+    spec = QuantSpec(bits=bits, bit_balance=bb)
+    pw = pack_weight(w, spec)
+    sc, zp = weight_scales(w, spec)
+    q = quantize_weight(w, sc, zp, spec)
+    lv = unpack_levels(pw.planes, 96)
+    assert np.array_equal(np.asarray(q), np.asarray(lv))
+    assert pw.n_planes == spec.storage_bits

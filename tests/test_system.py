@@ -1,0 +1,56 @@
+"""End-to-end behaviour test for the paper's system: train a tiny LM,
+ABQ-quantize it (the paper's full deployment path), and serve it — the
+quantized model must still model the planted structure of the data."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import ArchConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from repro.models.quantized import QuantizeConfig, quantize_model
+
+
+def test_train_quantize_serve_end_to_end():
+    cfg = ArchConfig(name="e2e", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=128)
+    ctx = ModelContext(cfg=cfg, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg, dtype=jnp.float32)
+    opt_cfg = optim.AdamWConfig(lr=5e-3)
+    opt = optim.init(params, opt_cfg)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64))
+
+    @jax.jit
+    def step(p, o, batch):
+        loss, grads = jax.value_and_grad(
+            lambda pp: lm.loss_fn(pp, batch, cfg, ctx, n_loss_chunks=2)[0])(p)
+        p, o = optim.update(grads, o, p, opt_cfg)
+        return p, o, loss
+
+    losses = []
+    for i in range(60):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(i, 8).items()}
+        params, opt, loss = step(params, opt, b)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, f"no learning: {losses[0]}->{losses[-1]}"
+
+    # quantize (W4A8 RTN) and check the served model still beats chance
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8))
+    b = {k: jnp.asarray(v) for k, v in ds.batch(999, 8).items()}
+    loss_fp, _ = lm.loss_fn(params, b, cfg, ctx, n_loss_chunks=2)
+    loss_q, _ = lm.loss_fn(qp, b, cfg, ctx, n_loss_chunks=2)
+    chance = np.log(cfg.vocab_size)
+    assert float(loss_q) < chance - 0.2, "quantized model lost the structure"
+    assert float(loss_q) < float(loss_fp) + 0.15, "W4A8 degraded too much"
+
+    # serve a few tokens
+    logits, cache = lm.prefill(qp, b["tokens"][:2, :32], cfg, ctx, max_len=40)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(4):
+        logits, cache = lm.decode_step(qp, cache, tok, cfg, ctx)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
