@@ -1,0 +1,155 @@
+"""Decode fast-path benchmark: fused ReQuant+GEMM vs the unfused baseline.
+
+Two measurements per (W, A) config, written to ``BENCH_decode.json`` so the
+decode perf trajectory is tracked PR over PR:
+
+1. **Modeled HBM bytes per decoded token** (v5e roofline accounting, the
+   same machinery as `bench_gemm_bytes` / `tuning.model_cost`) for one
+   transformer block's worth of quantized linears at LLaMA-7B shapes.
+   The unfused path charges the act_quant round-trip (bf16 read + int8/scale
+   write, then int8/scale read by the GEMM); the fused path reads the bf16
+   activation once inside the GEMM kernel. The fused total must be
+   **strictly lower** — that is the acceptance gate.
+
+2. **Smoke decode throughput** (CPU, XLA path, tiny model): wall-clock
+   tok/s of `Server.generate`'s scan decode with the fusion on vs off
+   (``REPRO_ABQ_FUSED``). Indicative only on CPU; the modeled bytes carry
+   the TPU claim.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_decode [--no-smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+# LLaMA-7B decode-step linears (per block): qkv/o + gate/up/down
+DECODE_LINEARS = [
+    ("wq", 4096, 4096),
+    ("wk", 4096, 4096),
+    ("wv", 4096, 4096),
+    ("wo", 4096, 4096),
+    ("w_gate", 4096, 11008),
+    ("w_up", 4096, 11008),
+    ("w_down", 11008, 4096),
+]
+
+CONFIGS = [("W2A8", 2, 8), ("W4A8", 4, 8)]
+
+
+def linear_bytes(m: int, k: int, n: int, w_bits: int, *, fused: bool) -> dict:
+    """Modeled HBM traffic for one quantized linear at decode (batch=m).
+
+    Shared terms: packed weight planes + scale/zp stream once (decode's
+    single M pass), output written bf16.
+    Unfused adds the ReQuant round-trip: bf16 act read by act_quant, int8
+    act + f32 scale written to HBM, then read back by the GEMM kernel.
+    Fused reads the bf16 activation once, in the GEMM prologue.
+    """
+    w_bytes = w_bits * k * n / 8 + 2 * 4 * n  # planes + f32 scale/zp
+    out_bytes = 2 * m * n
+    act_bf16 = 2 * m * k
+    act_int8 = m * k + 4 * m  # container + per-token scale
+    if fused:
+        act_bytes = act_bf16
+    else:
+        act_bytes = act_bf16 + 2 * act_int8  # write then read back
+    return {"total": w_bytes + act_bytes + out_bytes,
+            "weights": w_bytes, "acts": act_bytes, "out": out_bytes}
+
+
+def modeled_bytes_per_token(batch: int, w_bits: int, *,
+                            fused: bool) -> tuple[float, float]:
+    """(total, activation-stream) bytes over one block's linears, per
+    decoded token. Decode is weight-bound, so the total moves by fractions
+    of a percent while the activation stream — the thing the fusion
+    deletes — drops by 50% (bf16 read vs bf16 read + int8 write + int8
+    read); both are tracked."""
+    total = act = 0.0
+    for _, k, n in DECODE_LINEARS:
+        r = linear_bytes(batch, k, n, w_bits, fused=fused)
+        total += r["total"]
+        act += r["acts"]
+    return total / batch, act / batch
+
+
+def smoke_decode_tok_s(w_bits: int, *, fused: bool, gen: int = 8,
+                       batch: int = 2) -> float:
+    """Tiny-model wall-clock decode tok/s with the fusion toggled."""
+    from repro.launch.serve import Server
+
+    prev = os.environ.get("REPRO_ABQ_FUSED")
+    os.environ["REPRO_ABQ_FUSED"] = "1" if fused else "0"
+    try:
+        server = Server(arch="qwen3-4b", smoke=True, w_bits=w_bits,
+                        max_len=64)
+        prompts = [[1, 2, 3, 4]] * batch
+        # warmup at the SAME gen length: n_steps is a static jit arg, so a
+        # different length would leave compilation inside the timed call
+        server.generate(prompts, max_new_tokens=gen)
+        _, stats = server.generate(prompts, max_new_tokens=gen)
+        return stats["decode_tok_s"]
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_ABQ_FUSED", None)
+        else:
+            os.environ["REPRO_ABQ_FUSED"] = prev
+
+
+def run(print_fn=print, smoke: bool = True, out_path: str = "BENCH_decode.json") -> dict:
+    results: dict = {"configs": {}}
+    batch = 4
+    ok = True
+    for tag, wb, _ab in CONFIGS:
+        unfused, act_u = modeled_bytes_per_token(batch, wb, fused=False)
+        fused, act_f = modeled_bytes_per_token(batch, wb, fused=True)
+        saved = 1.0 - fused / unfused
+        act_saved = 1.0 - act_f / act_u
+        strictly_less = fused < unfused
+        ok = ok and strictly_less
+        results["configs"][tag] = {
+            "batch": batch,
+            "bytes_per_token_unfused": unfused,
+            "bytes_per_token_fused": fused,
+            "bytes_saved_frac": saved,
+            "act_stream_saved_frac": act_saved,
+        }
+        print_fn(f"decode_bytes,{tag},B={batch},"
+                 f"unfused={unfused:.3e},fused={fused:.3e},"
+                 f"saved={saved*100:.2f}%,act_stream_saved={act_saved*100:.0f}%,"
+                 f"{'PASS' if strictly_less else 'FAIL'}")
+
+    if smoke:
+        for tag, wb, _ab in CONFIGS:
+            tf = smoke_decode_tok_s(wb, fused=True)
+            tu = smoke_decode_tok_s(wb, fused=False)
+            results["configs"][tag]["smoke_tok_s_fused"] = tf
+            results["configs"][tag]["smoke_tok_s_unfused"] = tu
+            print_fn(f"decode_smoke,{tag},fused_tok_s={tf:.1f},"
+                     f"unfused_tok_s={tu:.1f}  (CPU-indicative)")
+
+    results["fused_strictly_fewer_bytes"] = ok
+    print_fn(f"decode_check,fused_bytes_strictly_lower,"
+             f"{'PASS' if ok else 'FAIL'}")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print_fn(f"decode_bench,wrote={out_path}")
+    return results
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--no-smoke", action="store_true",
+                   help="skip the tiny-model wall-clock section")
+    p.add_argument("--out", default="BENCH_decode.json")
+    args = p.parse_args(argv)
+    r = run(smoke=not args.no_smoke, out_path=args.out)
+    return 0 if r["fused_strictly_fewer_bytes"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

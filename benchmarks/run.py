@@ -49,6 +49,13 @@ def main(argv=None) -> int:
     if not (r["ratio_fp16"] > 3.0 and r["ratio_w8a8"] > 1.8):
         failures.append("e2e_memory")
 
+    section("Fused decode fast-path: ReQuant+GEMM bytes/token & tok/s")
+    from benchmarks import bench_decode
+
+    r = bench_decode.run(smoke=not args.fast)
+    if not r["fused_strictly_fewer_bytes"]:
+        failures.append("decode_fused_bytes")
+
     if not args.fast:
         section("Tables 1/2/5/6/7 analogue: quantization-config perplexity"
                 " (trains the benchmark LM on first run)")

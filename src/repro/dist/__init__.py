@@ -1,0 +1,2 @@
+"""Distribution utilities: logical->physical sharding rules and gradient
+compression for the multi-pod training regime."""

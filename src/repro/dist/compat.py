@@ -1,0 +1,44 @@
+"""jax API compatibility shims.
+
+The codebase targets current jax (`jax.shard_map`, `jax.sharding.AxisType`,
+`pltpu.CompilerParams`); this module backfills the older spellings so the
+same code runs on the container's pinned jax.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check: bool = False):
+    """`jax.shard_map` when available, else the experimental spelling
+    (`check` maps onto check_vma / check_rep respectively)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def tpu_compiler_params():
+    """Pallas TPU CompilerParams class under its current or legacy name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types when the installed jax has
+    explicit-sharding axis types; plain mesh otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(axis_type.Auto,) * len(axes),
+    )

@@ -1,0 +1,99 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+The pod axis rides DCN (slow inter-pod links), so the replicated-across-pods
+regime compresses the gradient all-reduce: each leaf is quantized to int8
+with a per-leaf absmax scale, psum'd across the given axes, and dequantized;
+the local quantization residual is carried into the next step (error
+feedback), so the *cumulative* contributed gradient is unbiased even though
+every individual step is lossy.
+
+API (used by `launch/train.py`):
+  init_error_state(params)                    -> zero residual tree
+  compressed_pmean(grads, err, mesh, axes)    -> (mean grads, new residuals)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+QMAX = 127.0
+
+
+def init_error_state(params: Any) -> Any:
+    """Zero-initialized f32 residual tree matching ``params``."""
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_leaf(g: Array, e: Array) -> tuple[Array, Array, Array]:
+    """(grad + residual) -> (int8 values, f32 scale, new residual)."""
+    gf = g.astype(jnp.float32) + e
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(amax, 1e-30) / QMAX
+    q = jnp.clip(jnp.round(gf / scale), -QMAX, QMAX).astype(jnp.int8)
+    new_e = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_e
+
+
+def compressed_pmean(grads: Any, err_state: Any, mesh, axes) -> tuple[Any, Any]:
+    """int8-compressed mean of ``grads`` over the mesh ``axes``.
+
+    Quantization (and the residual update) is local; only the int8 payload
+    conceptually crosses the wire. The psum runs in a shard_map over the full
+    mesh with replicated specs — gradients reaching this point are already
+    sharded/replicated consistently by the outer jit, so the collective is
+    purely the cross-``axes`` mean.
+    """
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    missing = [a for a in axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"compressed_pmean axes {missing} not in mesh axes "
+            f"{mesh.axis_names} — a silent skip here would return local "
+            "gradients as if they were the cross-pod mean")
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(err_state)
+    if not axes or mesh.size == 1:
+        out = []
+        new_err = []
+        for g, e in zip(leaves, err_leaves):
+            q, scale, ne = _quantize_leaf(g, e)
+            out.append(q.astype(jnp.float32) * scale)
+            new_err.append(ne)
+        return jax.tree.unflatten(treedef, out), \
+            jax.tree.unflatten(treedef, new_err)
+
+    qs, scales, new_err = [], [], []
+    for g, e in zip(leaves, err_leaves):
+        q, scale, ne = _quantize_leaf(g, e)
+        qs.append(q)
+        scales.append(scale)
+        new_err.append(ne)
+
+    def mean_fn(qs_, scales_):
+        out = []
+        for q, s in zip(qs_, scales_):
+            deq = q.astype(jnp.float32) * s
+            out.append(jax.lax.pmean(deq, axes))
+        return tuple(out)
+
+    from repro.dist.compat import shard_map
+
+    n_in = len(qs)
+    out = shard_map(
+        mean_fn,
+        mesh=mesh,
+        in_specs=(tuple(P() for _ in range(n_in)),
+                  tuple(P() for _ in range(n_in))),
+        out_specs=tuple(P() for _ in range(n_in)),
+        check=False,
+    )(tuple(qs), tuple(scales))
+    return jax.tree.unflatten(treedef, list(out)), \
+        jax.tree.unflatten(treedef, new_err)

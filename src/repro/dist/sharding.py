@@ -1,0 +1,112 @@
+"""Logical->physical sharding rules (MaxText-style).
+
+The model code annotates tensors with *logical* axis names ("batch", "seq",
+"tensor", or None); `ShardingRules` maps each logical name onto zero or more
+*physical* mesh axes. Defaults target the production meshes in
+`repro.launch.mesh`:
+
+  batch  -> ("pod", "data")   activations' leading dim (pure DP)
+  fsdp   -> ("pod", "data")   weight rows (ZeRO-3 style parameter sharding)
+  tensor -> "model"           heads / ff / vocab / experts-ff
+
+``resolve(mesh)`` drops axes the mesh does not have (a host mesh has no
+"pod"; a serve mesh may drop "fsdp" entirely — see `dryrun.rules_for`), so
+the same rule object works on 1-device CPU, the 8-device test mesh, and the
+256/512-chip production meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, tuple]
+
+
+def _as_tuple(ax: Axes) -> tuple:
+    if ax is None:
+        return ()
+    if isinstance(ax, str):
+        return (ax,)
+    return tuple(ax)
+
+
+def axis_size(mesh: Optional[Mesh], ax: Axes) -> int:
+    """Product of the mesh sizes of ``ax`` (axes absent from the mesh count
+    as 1). ``ax`` may be None, a single axis name, or a tuple of names."""
+    if mesh is None:
+        return 1
+    size = 1
+    for a in _as_tuple(ax):
+        if a in mesh.shape:
+            size *= mesh.shape[a]
+    return size
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> physical-mesh-axis mapping.
+
+    Each field is None (replicate), one axis name, or a tuple of axis names
+    (the composed axis shards over their product). ``seq`` defaults to
+    replicated — sequence parallelism is an open item."""
+
+    batch: Axes = ("pod", "data")
+    fsdp: Axes = ("pod", "data")
+    tensor: Axes = "model"
+    seq: Axes = None
+
+    def resolve(self, mesh: Optional[Mesh]) -> "ShardingRules":
+        """Drop axes the mesh does not have; collapse singleton tuples to a
+        bare name and empty tuples to None."""
+        if mesh is None:
+            return ShardingRules(batch=None, fsdp=None, tensor=None, seq=None)
+
+        def keep(ax: Axes) -> Axes:
+            present = tuple(a for a in _as_tuple(ax)
+                            if a in mesh.shape and mesh.shape[a] > 1)
+            if not present:
+                return None
+            if len(present) == 1:
+                return present[0]
+            return present
+
+        return ShardingRules(
+            batch=keep(self.batch), fsdp=keep(self.fsdp),
+            tensor=keep(self.tensor), seq=keep(self.seq),
+        )
+
+    def physical(self, logical: Optional[str]) -> Axes:
+        """Physical axes for one logical annotation (pre-`resolve` names)."""
+        if logical is None:
+            return None
+        table = {"batch": self.batch, "seq": self.seq, "tensor": self.tensor,
+                 "fsdp": self.fsdp}
+        if logical not in table:
+            raise ValueError(f"unknown logical axis {logical!r}")
+        return table[logical]
+
+
+def constraint(x: jax.Array, mesh: Optional[Mesh], rules: ShardingRules,
+               *logical: Optional[str]) -> jax.Array:
+    """`with_sharding_constraint` with logical names; no-op off-mesh.
+
+    Dims whose size does not divide the mapped axis product fall back to
+    replicated rather than erroring (tiny test configs on big meshes)."""
+    if mesh is None or mesh.size <= 1:
+        return x
+    rules = rules.resolve(mesh)
+    if len(logical) != x.ndim:
+        raise ValueError(
+            f"{len(logical)} logical axes for rank-{x.ndim} tensor")
+    spec = []
+    for dim, name in enumerate(logical):
+        ax = rules.physical(name)
+        n = axis_size(mesh, ax)
+        spec.append(ax if (ax is not None and n > 1
+                           and x.shape[dim] % n == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,185 @@
+"""Fused ReQuant + arbitrary-bit GEMM Pallas kernel (the decode fast-path).
+
+The unfused serving path launches two kernels per linear:
+
+    bf16 x --[act_quant]--> int8 q, f32 s --(HBM round-trip)--> [abq_matmul]
+
+which writes the int8 activation + scales to HBM only for the very next
+kernel to read them back. The paper fuses online activation quantization
+into the adjacent GEMM (§3.4 "Engine Implementation", Fig. 4b); this kernel
+is the TPU form of that fusion:
+
+* the x tile streams HBM→VMEM **once**, in bf16;
+* the kernel prologue computes per-token absmax → scale → round → clip on
+  the VPU — bit-identical math to `act_quant_pallas` / `act_quant_ref`;
+* the int8 container feeds the bit-plane MXU matmuls directly from VMEM —
+  the quantized activation never touches HBM;
+* the epilogue applies the combined activation/weight dequant.
+
+Grid is (M/BM, N/BN) with the **full contraction length per tile** (the
+per-token scale needs the whole row, and decode rows are small): a
+weight-stationary GEMV schedule. The ops-layer dispatcher
+(`repro.kernels.ops.abq_linear`) falls back to the unfused two-kernel path
+when the full-K tile would bust the VMEM budget (`fits_vmem`) or for
+per-group (g128) weights.
+
+`debug_return_quant=True` additionally writes the int8 container + scales
+to HBM so tests can assert bitwise identity with the unfused path — never
+used in the serving path (it would re-create the traffic the fusion
+deletes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.abq_matmul import WORD, _CompilerParams, _unpack_words
+from repro.kernels.ref import requant_rows
+
+Array = jax.Array
+
+
+def _fused_kernel(
+    x_ref,  # bf16/f32 (BM, K)
+    planes_ref,  # uint32 (P, K/32, BN)
+    ws_ref,  # f32 (1, BN)
+    zp_ref,  # f32 (1, BN)
+    o_ref,  # (BM, BN) out dtype
+    *debug_refs,  # optionally (q_ref (BM, K) int8, s_ref (BM, 1) f32)
+    n_planes: int,
+    qmax: float,
+    out_dtype,
+):
+    bm, kk = x_ref.shape
+    bn = o_ref.shape[-1]
+
+    # ReQuant prologue: per-token symmetric int8 container, VPU only —
+    # the same `requant_rows` the standalone quantizer runs, so the
+    # container is bitwise identical to the unfused path. Zero-padded K
+    # columns contribute |0| to the absmax and quantize to 0.
+    q, scale = requant_rows(x_ref[...], qmax)
+
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for s in range(n_planes):  # static unroll over planes (P <= 8)
+        w_bits = _unpack_words(planes_ref[s], kk, bn)
+        part = jax.lax.dot_general(
+            q,
+            w_bits,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc += part << s
+    rowsum = jnp.sum(q.astype(jnp.int32), axis=1, keepdims=True)
+    deq = scale * (
+        ws_ref[...] * (acc.astype(jnp.float32)
+                       - zp_ref[...] * rowsum.astype(jnp.float32))
+    )
+    o_ref[...] = deq.astype(out_dtype)
+    if debug_refs:  # tests only: emit the container the GEMM consumed
+        q_ref, s_ref = debug_refs
+        q_ref[...] = q
+        s_ref[...] = scale
+
+
+def fits_vmem(m_block: int, k: int, n_block: int, n_planes: int,
+              budget: int) -> bool:
+    """Conservative VMEM estimate for one fused tile.
+
+    f32 x copy + int8 container + packed planes + one unpacked plane +
+    int32/f32 accumulators; doubled for Pallas' automatic double-buffering
+    of the streamed inputs.
+    """
+    x_bytes = (4 + 1 + 2) * m_block * k
+    plane_bytes = 4 * n_planes * (k // WORD) * n_block + k * n_block
+    acc_bytes = (4 + 4) * m_block * n_block
+    return 2 * (x_bytes + plane_bytes) + acc_bytes <= budget
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("qmax", "block_m", "block_n", "out_dtype",
+                     "debug_return_quant", "interpret"),
+)
+def abq_linear_fused_pallas(
+    x: Array,
+    planes: Array,
+    w_scale: Array,
+    w_zp: Array,
+    *,
+    qmax: float = 127.0,
+    block_m: int = 32,
+    block_n: int = 128,
+    out_dtype=jnp.bfloat16,
+    debug_return_quant: bool = False,
+    interpret: bool = False,
+):
+    """bf16/f32 x [M, K] × packed weight -> [M, N] without an HBM round-trip
+    of the quantized activation.
+
+    K must equal the planes' padded contraction length (callers zero-pad —
+    `ops.abq_linear` does); N must tile by ``block_n`` (after clamping).
+    Returns the output, or (out, q, scales) when ``debug_return_quant``.
+    """
+    m, kk = x.shape
+    n_planes, kw, n = planes.shape
+    if kw * WORD != kk:
+        raise ValueError(f"planes imply K={kw * WORD}, activations have K={kk}")
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must tile by block_n={block_n}")
+    pm = (m + block_m - 1) // block_m * block_m
+    if pm != m:
+        x = jnp.pad(x, ((0, pm - m), (0, 0)))
+    grid = (pm // block_m, n // block_n)
+
+    in_specs = [
+        pl.BlockSpec((block_m, kk), lambda i, j: (i, 0)),
+        pl.BlockSpec((n_planes, kw, block_n), lambda i, j: (0, 0, j)),
+        pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+    ]
+    if debug_return_quant:
+        out, q, s = pl.pallas_call(
+            functools.partial(
+                _fused_kernel, n_planes=n_planes, qmax=qmax,
+                out_dtype=out_dtype,
+            ),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+                # every j block writes the same values: harmless, debug-only
+                pl.BlockSpec((block_m, kk), lambda i, j: (i, 0)),
+                pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((pm, n), out_dtype),
+                jax.ShapeDtypeStruct((pm, kk), jnp.int8),
+                jax.ShapeDtypeStruct((pm, 1), jnp.float32),
+            ],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(x, planes, w_scale, w_zp)
+        return out[:m], q[:m], s[:m]
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, n_planes=n_planes, qmax=qmax, out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, n), out_dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, planes, w_scale, w_zp)
+    return out[:m]

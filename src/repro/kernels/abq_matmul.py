@@ -16,6 +16,17 @@ Grid: (M/BM, N/BN, K/BK), K innermost ("arbitrary" semantics) so the fp32
 accumulator lives in VMEM scratch across the K sweep. Pallas double-buffers
 the HBM→VMEM streams automatically — the analogue of the paper's cp.async
 pipeline (Appendix D, Computational Pipeline Optimization).
+
+Block sizes are the paper's Auto Kernel Search knob: callers that do not
+pin them get per-shape tiles from `repro.kernels.tuning.best_blocks` (via
+the `ops.abq_matmul` wrapper) — decode GEMV shapes select small-M
+weight-stationary tiles (BM <= 32), prefill keeps MXU-saturating 128-class
+tiles. This kernel consumes a pre-quantized int8 activation; the decode
+fast-path normally runs its fused sibling `abq_fused.abq_linear_fused_pallas`
+instead (ReQuant in the kernel prologue, no HBM round-trip of the int8
+container — A/B toggle ``REPRO_ABQ_FUSED``, see `ops.abq_linear`). This
+unfused kernel remains the baseline half of that A/B and the path for
+per-group (g128) weights and VMEM-busting contraction lengths.
 """
 
 from __future__ import annotations
@@ -27,9 +38,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.dist.compat import tpu_compiler_params
+
 Array = jax.Array
 
 WORD = 32
+
+_CompilerParams = tpu_compiler_params()
 
 
 def _unpack_words(words: Array, bk: int, bn: int) -> Array:
@@ -156,7 +171,7 @@ def abq_matmul_pallas(
             pltpu.VMEM((block_m, block_n), jnp.float32),
             pltpu.VMEM((block_m, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -15,15 +15,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import requant_rows
+
 Array = jax.Array
 
 
 def _act_quant_kernel(x_ref, q_ref, s_ref, *, qmax: float):
-    x = x_ref[...].astype(jnp.float32)
-    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
-    q_ref[...] = q.astype(jnp.int8)
+    q, scale = requant_rows(x_ref[...], qmax)
+    q_ref[...] = q
     s_ref[...] = scale
 
 

@@ -23,9 +23,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.dist.compat import tpu_compiler_params
+
 Array = jax.Array
 
 _NEG_INF = -1e30
+
+_CompilerParams = tpu_compiler_params()
 
 
 def _flash_kernel(
@@ -168,7 +172,7 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -2,9 +2,9 @@
 
 Every op has three interchangeable execution paths:
 
-* ``pallas``  — the TPU kernel (`abq_matmul.py`, `act_quant.py`,
-  `flash_attention.py`). Used on real TPU; exercised in tests via
-  ``interpret=True``.
+* ``pallas``  — the TPU kernel (`abq_matmul.py`, `abq_fused.py`,
+  `act_quant.py`, `flash_attention.py`). Used on real TPU; exercised in
+  tests via ``interpret=True``.
 * ``xla``     — a pure-jnp implementation with the *same memory layout and
   math* (packed bit-planes in HBM, unpack-then-int-matmul, online-softmax
   chunked attention). This is what the multi-pod dry-run lowers, so
@@ -12,11 +12,25 @@ Every op has three interchangeable execution paths:
 * ``ref``     — the tiny oracle in `ref.py` (tests only).
 
 ``backend='auto'`` picks pallas on TPU, xla elsewhere.
+
+A/B toggles (all also take explicit keyword args that win over the env):
+
+* ``REPRO_ABQ_FUSED`` ∈ {"1" (default), "0"} — "1" routes `abq_linear`
+  through the fused ReQuant+GEMM kernel (`abq_fused.py`): the int8
+  activation container never round-trips HBM between the quantizer and the
+  GEMM. "0" restores the two-kernel act_quant → abq_matmul baseline.
+* ``REPRO_DECODE_ATTN`` ∈ {"int8", "fold", "naive"} — decode-attention
+  dequant strategy (§Perf iterations; see `decode_attention`).
+
+Block sizes: when the caller does not pin (block_m, block_n, block_k), the
+pallas paths ask `tuning.best_blocks` — a cached per-(M, K, N, w_bits)
+roofline search — so prefill (large M) and decode (M = batch) each get
+shape-appropriate tiles instead of one hardcoded config.
 """
 
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional
 
 import jax
@@ -25,6 +39,8 @@ import jax.numpy as jnp
 from repro.core import bitplane
 from repro.core.quantizers import PackedWeight
 from repro.kernels import ref as _ref
+from repro.kernels import tuning
+from repro.kernels.abq_fused import abq_linear_fused_pallas, fits_vmem
 from repro.kernels.abq_matmul import abq_matmul_pallas
 from repro.kernels.act_quant import act_quant_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -45,13 +61,33 @@ def _resolve(backend: str) -> str:
 # ---------------------------------------------------------------------------
 
 
+def act_qmax(bits: int) -> float:
+    """Container max |q| for a ``bits``-wide symmetric per-token grid.
+
+    ====  ====  =======================================
+    bits  qmax  grid
+    ====  ====  =======================================
+    8     127   int8 full range (±127; -128 unused)
+    4     7     ±7
+    3     3     ±3
+    2     1     ternary {-1, 0, 1}
+    1     1     binary sign container {-1, 0, 1}·scale
+    ====  ====  =======================================
+
+    General rule ``2^(bits-1) - 1``; 1-bit floors at 1.0 (a 0-level grid
+    cannot represent anything) — the sign container the paper's W·A1
+    configs use.
+    """
+    if not 1 <= bits <= 8:
+        raise ValueError(f"activation bits must be in [1, 8], got {bits}")
+    return max(float(2 ** (bits - 1) - 1), 1.0)
+
+
 def act_quant(
     x: Array, bits: int = 8, backend: str = "auto", interpret: bool = False
 ) -> tuple[Array, Array]:
     """Per-token symmetric quantization of x[..., D] -> (int8, f32 scales)."""
-    qmax = float(2 ** (bits - 1) - 1) if bits > 1 else 1.0
-    if bits == 8:
-        qmax = 127.0
+    qmax = act_qmax(bits)
     lead = x.shape[:-1]
     d = x.shape[-1]
     x2 = x.reshape(-1, d)
@@ -119,6 +155,27 @@ def _abq_matmul_xla(
     return out.astype(out_dtype)
 
 
+def _tuned_blocks(m: int, kp: int, n: int, pw: PackedWeight) -> tuple:
+    """Cached autotuned (block_m, block_n, block_k) for one GEMM shape."""
+    cand = tuning.best_blocks(m, kp, n, int(pw.planes.shape[0]))
+    return cand.block_m, cand.block_n, cand.block_k
+
+
+def _flatten_pad(x: Array, pw: PackedWeight) -> tuple[Array, tuple]:
+    """Flatten leading dims and zero-pad the contraction to the planes'
+    32-padded length; the one place the activation/weight K contract is
+    enforced. Returns (x2 [M, Kp], lead_shape)."""
+    lead = x.shape[:-1]
+    kk = x.shape[-1]
+    x2 = x.reshape(-1, kk)
+    kp = bitplane.padded_k(pw.k)
+    if kk != kp:
+        if kk != pw.k:
+            raise ValueError(f"activation K={kk} != weight K={pw.k}")
+        x2 = jnp.pad(x2, ((0, 0), (0, kp - kk)))
+    return x2, lead
+
+
 def abq_matmul(
     x_q: Array,
     x_scale: Array,
@@ -126,23 +183,29 @@ def abq_matmul(
     *,
     out_dtype=jnp.bfloat16,
     backend: str = "auto",
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 512,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: bool = False,
 ) -> Array:
-    """Quantized GEMM: x_q int8 [..., K] × packed weight -> bf16 [..., N]."""
-    lead = x_q.shape[:-1]
-    kk = x_q.shape[-1]
-    x2 = x_q.reshape(-1, kk)
+    """Quantized GEMM: x_q int8 [..., K] × packed weight -> bf16 [..., N].
+
+    Block sizes default to the `tuning.best_blocks` cache (decode shapes get
+    small-M weight-stationary tiles, prefill gets MXU-saturating ones);
+    passing any of them explicitly pins all three (missing ones take the
+    legacy 128/128/512 defaults).
+    """
+    x2, lead = _flatten_pad(x_q, pw)
     s2 = x_scale.reshape(-1, 1)
-    kp = bitplane.padded_k(pw.k)
-    if kk != kp:
-        if kk != pw.k:
-            raise ValueError(f"activation K={kk} != weight K={pw.k}")
-        x2 = jnp.pad(x2, ((0, 0), (0, kp - kk)))
     backend = _resolve(backend)
     if backend == "pallas":
+        if block_m is None and block_n is None and block_k is None:
+            block_m, block_n, block_k = _tuned_blocks(
+                x2.shape[0], x2.shape[1], pw.out_features, pw)
+        else:
+            block_m = 128 if block_m is None else block_m
+            block_n = 128 if block_n is None else block_n
+            block_k = 512 if block_k is None else block_k
         out = abq_matmul_pallas(
             x2,
             s2,
@@ -160,6 +223,30 @@ def abq_matmul(
     return out.reshape(*lead, pw.out_features)
 
 
+# ---------------------------------------------------------------------------
+# fused ReQuant + GEMM (abq_linear)
+# ---------------------------------------------------------------------------
+
+
+def _fused_enabled() -> bool:
+    val = os.environ.get("REPRO_ABQ_FUSED", "1")
+    if val not in ("0", "1"):
+        raise ValueError(
+            f"REPRO_ABQ_FUSED must be '0' or '1', got {val!r}")
+    return val == "1"
+
+
+def _abq_linear_fused_xla(
+    x: Array, pw: PackedWeight, qmax: float, out_dtype
+) -> Array:
+    """XLA mirror of the fused kernel: quantization inlined into the same
+    jitted region as the bit-plane matmul, so XLA fuses the producer into
+    the GEMM prologue — the int8 container is never a standalone HBM
+    round-trip in the lowered module."""
+    q, scale = _ref.requant_rows(x, qmax)
+    return _abq_matmul_xla(q, scale, pw, out_dtype=out_dtype)
+
+
 def abq_linear(
     x: Array,
     pw: PackedWeight,
@@ -168,17 +255,54 @@ def abq_linear(
     out_dtype=jnp.bfloat16,
     backend: str = "auto",
     interpret: bool = False,
+    fused: Optional[bool] = None,
 ) -> Array:
-    """ReQuant + ABQ GEMM: bf16 [..., K] -> bf16 [..., N]."""
-    x_q, x_scale = act_quant(x, bits=act_bits, backend=backend, interpret=interpret)
+    """ReQuant + ABQ GEMM: bf16 [..., K] -> bf16 [..., N].
+
+    ``fused=None`` consults ``REPRO_ABQ_FUSED`` (default on): the ReQuant
+    runs inside the GEMM kernel and the quantized activation stays in VMEM.
+    The unfused two-kernel path remains for A/B and as the fallback when a
+    full-K fused tile would not fit VMEM or the weight is per-group (g128)
+    quantized.
+    """
+    if fused is None:
+        fused = _fused_enabled()
+    backend = _resolve(backend)
+    qmax = act_qmax(act_bits)
+    if fused and pw.scale.ndim != 3:  # g128 scales: unfused path only
+        x2, lead = _flatten_pad(x, pw)
+        kp = x2.shape[-1]
+        if backend != "pallas":
+            out = _abq_linear_fused_xla(x2, pw, qmax, out_dtype)
+            return out.reshape(*lead, pw.out_features)
+        bm, bn, _ = _tuned_blocks(x2.shape[0], kp, pw.out_features, pw)
+        if fits_vmem(bm, kp, bn, int(pw.planes.shape[0]),
+                     tuning.VMEM_BYTES // 4):
+            out = abq_linear_fused_pallas(
+                x2, pw.planes, pw.scale, pw.zero_point,
+                qmax=qmax, block_m=bm, block_n=bn,
+                out_dtype=out_dtype, interpret=interpret,
+            )
+            return out.reshape(*lead, pw.out_features)
+        # fall through: K too large for a fused full-K tile
+
+    x_q, x_scale = act_quant(x, bits=act_bits, backend=backend,
+                             interpret=interpret)
     return abq_matmul(
-        x_q, x_scale, pw, out_dtype=out_dtype, backend=backend, interpret=interpret
+        x_q, x_scale, pw, out_dtype=out_dtype, backend=backend,
+        interpret=interpret,
     )
 
 
 # ---------------------------------------------------------------------------
 # attention
 # ---------------------------------------------------------------------------
+
+# decode-attention dequant strategies (§Perf iterations, kept for A/B):
+#   int8  — fully-integer QK/PV contractions, scales applied to logits/probs
+#   fold  — f32 contractions with the dequant scale folded out (iteration 1)
+#   naive — dequantize the cache to f32, then attend (baseline)
+DECODE_ATTN_MODES = ("int8", "fold", "naive")
 
 
 def _flash_xla(
@@ -321,16 +445,22 @@ def decode_attention(
     int8 bytes) never materializes. Exact same math: the scale is constant
     along the contracted D axis. fused_dequant=False keeps the naive
     dequant-then-attend path (the pre-iteration baseline, kept for A/B).
-    """
-    import os as _os
 
+    Mode resolution: explicit ``fused_dequant`` (bool) wins; otherwise the
+    ``REPRO_DECODE_ATTN`` env var picks one of ``DECODE_ATTN_MODES``
+    ("int8" default, "fold", "naive"); anything else raises.
+    """
     mode = fused_dequant
     if mode is None:  # A/B toggle for §Perf iterations
-        mode = _os.environ.get("REPRO_DECODE_ATTN", "int8")
+        mode = os.environ.get("REPRO_DECODE_ATTN", "int8")
     if mode is True:
         mode = "int8"
-    if mode is False:
+    elif mode is False:
         mode = "naive"
+    if mode not in DECODE_ATTN_MODES:
+        raise ValueError(
+            f"decode_attention mode {mode!r} not in {DECODE_ATTN_MODES} "
+            "(check REPRO_DECODE_ATTN)")
     b, _, h, d = q.shape
     kvh, s_len = k_cache.shape[1], k_cache.shape[2]
     group = h // kvh

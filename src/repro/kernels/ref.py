@@ -87,12 +87,25 @@ def abq_matmul_grouped_ref(
     return (x_scale * out).astype(out_dtype)
 
 
+def requant_rows(x: Array, qmax: float) -> tuple[Array, Array]:
+    """THE per-token symmetric quantization core: absmax → scale (1e-8
+    floor) → round → clip. Every path — the act_quant Pallas kernel, the
+    fused ReQuant+GEMM kernel prologue, and the XLA mirrors — calls this
+    one function; its bitwise behavior is a tested cross-path invariant
+    (tests/test_fused_decode.py), so change it here or nowhere.
+
+    Returns (int8 values [..., D], f32 scales [..., 1]).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
 def act_quant_ref(x: Array, qmax: float = 127.0) -> tuple[Array, Array]:
     """Per-token symmetric quantization: returns (int8 values, f32 scales)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
-    return q.astype(jnp.int8), scale
+    return requant_rows(x, qmax)
 
 
 def flash_attention_ref(

@@ -6,19 +6,36 @@ ranks candidates with the v5e roofline cost model (HBM stream vs MXU time,
 double-buffered) under the VMEM budget; on real TPU the same search loop
 plugs a wall-clock ``measure`` callable in place of the model.
 
-Used by `benchmarks/bench_kernel_ablation.py` (Table 4 analogue) and
-available to `abq_matmul_pallas` callers for block selection.
+Two regimes fall out of the model naturally:
+
+* prefill / training GEMM (M large): weight streaming amortizes over many
+  M passes, big (128/256) M tiles win;
+* decode GEMV (M = batch, ~1-32): the kernel pads M up to ``block_m``, so
+  every padded row is wasted MXU work *and* wasted activation bytes — the
+  model charges both (``m_pad``), which is what drives the search to the
+  small weight-stationary tiles (BM <= 32) the decode fast-path needs.
+
+``best_blocks`` is the dispatch entry: a per-(M, K, N, w_bits) cached search
+restricted to tile shapes the Pallas kernel accepts (BK | K, BK % 32 == 0,
+BN | N), used by `repro.kernels.ops.abq_matmul` / `abq_linear` whenever the
+caller does not pin blocks explicitly. `benchmarks/bench_kernel_ablation.py`
+(Table 4 analogue) uses the raw ``auto_tune`` search.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Callable, Optional
 
 HBM_BW = 819e9
 INT8_PEAK = 394e12
 VMEM_BYTES = 128 * 2**20
+
+_BM_CANDIDATES = (8, 16, 32, 64, 128, 256)
+_BN_CANDIDATES = (128, 256, 512)
+_BK_CANDIDATES = (128, 256, 512, 1024, 2048)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,15 +51,21 @@ class KernelCandidate:
 def model_cost(m: int, k: int, n: int, *, w_bits: int, packed: bool = True,
                overlap: bool = True, bm: int = 128, bn: int = 128,
                bk: int = 512) -> dict:
-    """HBM traffic + MXU time for one tiled bit-plane GEMM invocation."""
+    """HBM traffic + MXU time for one tiled bit-plane GEMM invocation.
+
+    M is padded up to a multiple of ``bm`` by the kernel, so both the MXU
+    op count and the streamed activation bytes are charged at the padded
+    ``m_pad`` — oversizing BM for a decode GEMV is visibly expensive here.
+    """
     m_eff = max(m, 8)
+    m_pad = (m_eff + bm - 1) // bm * bm
     planes = w_bits if packed else 8
-    passes = max(m_eff // bm, 1)  # weight tiles re-streamed per M pass
+    passes = max(m_pad // bm, 1)  # weight tiles re-streamed per M pass
     w_bytes = passes * (planes * k * n / 8)
-    a_bytes = (n // max(bn, 1)) * (m_eff * k)  # act tile re-read per N block
-    o_bytes = 2 * m_eff * n
+    a_bytes = (n // max(bn, 1)) * (m_pad * k)  # act tile re-read per N block
+    o_bytes = 2 * m_pad * n
     total_bytes = w_bytes + a_bytes + o_bytes
-    ops = 2.0 * m_eff * k * n * planes
+    ops = 2.0 * m_pad * k * n * planes
     t_mem = total_bytes / HBM_BW
     t_cmp = ops / INT8_PEAK
     t = max(t_mem, t_cmp) if overlap else t_mem + t_cmp
@@ -58,13 +81,22 @@ def auto_tune(
     w_bits: int,
     measure: Optional[Callable[[int, int, int], float]] = None,
     vmem_budget: int = VMEM_BYTES // 4,  # double-buffering headroom
+    require_divisible: bool = False,
 ) -> KernelCandidate:
-    """Pick (BM, BN, BK) minimizing modeled (or measured) time."""
+    """Pick (BM, BN, BK) minimizing modeled (or measured) time.
+
+    ``require_divisible`` restricts the search to tiles `abq_matmul_pallas`
+    accepts verbatim: BK divides K (and is a multiple of 32), BN divides N.
+    """
     best: Optional[KernelCandidate] = None
-    for bm, bn, bk in itertools.product(
-        (8, 16, 32, 64, 128, 256), (128, 256, 512), (128, 256, 512, 1024, 2048)
-    ):
+    bn_cands = _BN_CANDIDATES if not require_divisible else \
+        tuple(sorted({min(c, n) for c in _BN_CANDIDATES} | {n}))
+    bk_cands = _BK_CANDIDATES if not require_divisible else \
+        tuple(sorted({min(c, k) for c in _BK_CANDIDATES} | {k}))
+    for bm, bn, bk in itertools.product(_BM_CANDIDATES, bn_cands, bk_cands):
         if bk > k or bn > n or bk % 32:
+            continue
+        if require_divisible and (k % bk or n % bn):
             continue
         r = model_cost(m, k, n, w_bits=w_bits, bm=bm, bn=bn, bk=bk)
         if r["vmem"] > vmem_budget:
@@ -76,3 +108,18 @@ def auto_tune(
     if best is None:
         raise ValueError(f"no feasible block config for ({m},{k},{n})")
     return best
+
+
+@functools.lru_cache(maxsize=4096)
+def best_blocks(m: int, k: int, n: int, w_bits: int) -> KernelCandidate:
+    """Cached kernel-legal block config for one GEMM shape.
+
+    The dispatch cache: every distinct (M, K, N, w_bits) the serving path
+    encounters is searched once per process, then the jit cache takes over
+    (block sizes are static args of the Pallas call). Prefill and decode
+    have different M and therefore get independently-chosen tiles.
+
+    ``k`` must already be the 32-padded contraction length (``pw.planes``
+    geometry), so divisibility is checked against the real kernel operand.
+    """
+    return auto_tune(m, k, n, w_bits=w_bits, require_divisible=True)

@@ -7,6 +7,13 @@ batcher. Production continuous batching would slot new requests into free
 cache rows between steps; the cache layout here (batch-major, pos-indexed)
 supports that, and `admit` shows the hook.
 
+Decode is ONE jitted `lax.scan` over `lm.decode_step`
+(`lm.generate_tokens`): tokens accumulate on device and cross to the host
+exactly once per `generate` call, instead of a Python step loop with a
+per-token `int(...)` sync. Inside each step, every quantized linear runs
+the fused ReQuant+GEMM kernel (`kernels/abq_fused.py`) with
+decode-autotuned tiles — the serving hot path of the whole repo.
+
 CLI: PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke
 """
 
@@ -41,11 +48,19 @@ class Server:
                                    bit_balance=(w_bits <= 3))
         self.params = quantize_model(fp_params, self.cfg, self.qcfg)
         self.weight_mb = quantized_bytes(self.params) / 1e6
-        self._decode = jax.jit(
-            lambda qp, c, t: lm.decode_step(qp, c, t, self.cfg, self.ctx))
+        # n_steps is static (scan length); jit re-specializes per value.
+        self._generate = jax.jit(
+            lambda qp, c, t, n: lm.generate_tokens(
+                qp, c, t, n, self.cfg, self.ctx),
+            static_argnums=3,
+        )
 
     def generate(self, prompts: list[list[int]], *, max_new_tokens: int = 32,
                  greedy: bool = True):
+        """Prefill + scan-decode. Greedy only (``greedy`` kept for API
+        stability). Output tokens make exactly ONE device→host transfer."""
+        if not greedy:
+            raise NotImplementedError("sampling decode is an open item")
         cfg, ctx = self.cfg, self.ctx
         b = len(prompts)
         plen = max(len(q) for q in prompts)
@@ -60,16 +75,17 @@ class Server:
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
 
-        outs = [[] for _ in range(b)]
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
         t0 = time.time()
-        for _ in range(max_new_tokens):
-            for i in range(b):
-                outs[i].append(int(tok[i, 0] if tok.ndim == 2 else tok[i, 0, 0]))
-            logits, cache = self._decode(self.params, cache, tok)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(tok)
+        gen, cache = self._generate(self.params, cache, first, max_new_tokens)
+        gen_np = np.asarray(gen)  # the one device→host transfer
         t_decode = time.time() - t0
+
+        # gen_np: (steps, B, 1) or audio (steps, B, 1, n_cb) — report the
+        # first codebook for audio, matching the per-step loop this replaced.
+        if gen_np.ndim == 4:
+            gen_np = gen_np[..., 0]
+        outs = [gen_np[:, i, 0].tolist() for i in range(b)]
 
         stats = {
             "prefill_tok_s": b * plen / max(t_prefill, 1e-9),

@@ -212,29 +212,34 @@ def run(argv: Optional[list[str]] = None) -> dict:
     watch = StragglerWatch(tcfg.straggler_factor)
     params, opt_state, err_state = state.params, state.opt_state, state.err_state
     losses = []
-    for step in range(start, tcfg.steps):
-        if step == args.fail_at_step:
-            raise RuntimeError(f"[injected failure] at step {step}")
-        batch_np = ds.batch(step, tcfg.global_batch)
-        if cfg.family == "vlm":
-            rng = np.random.default_rng(step)
-            batch_np["image_embeds"] = rng.normal(
-                size=(tcfg.global_batch, cfg.n_image_tokens, cfg.d_model)
-            ).astype(np.float32) * 0.02
-        batch = jax.tree.map(jnp.asarray, batch_np)
-        t0 = time.time()
-        params, opt_state, err_state, metrics = jit_step(
-            params, opt_state, err_state, batch, jnp.asarray(step))
-        loss = float(metrics["loss"])
-        dt = time.time() - t0
-        slow = watch.record(step, dt)
-        losses.append(loss)
-        if step % 10 == 0 or step == tcfg.steps - 1:
-            print(f"[train] step={step} loss={loss:.4f} dt={dt*1e3:.0f}ms"
-                  + (" STRAGGLER" if slow else ""))
-        if (step + 1) % tcfg.checkpoint_every == 0 or step == tcfg.steps - 1:
-            saver.save(step + 1, {"params": params, "opt": opt_state})
-    saver.wait()
+    try:
+        for step in range(start, tcfg.steps):
+            if step == args.fail_at_step:
+                raise RuntimeError(f"[injected failure] at step {step}")
+            batch_np = ds.batch(step, tcfg.global_batch)
+            if cfg.family == "vlm":
+                rng = np.random.default_rng(step)
+                batch_np["image_embeds"] = rng.normal(
+                    size=(tcfg.global_batch, cfg.n_image_tokens, cfg.d_model)
+                ).astype(np.float32) * 0.02
+            batch = jax.tree.map(jnp.asarray, batch_np)
+            t0 = time.time()
+            params, opt_state, err_state, metrics = jit_step(
+                params, opt_state, err_state, batch, jnp.asarray(step))
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            slow = watch.record(step, dt)
+            losses.append(loss)
+            if step % 10 == 0 or step == tcfg.steps - 1:
+                print(f"[train] step={step} loss={loss:.4f} dt={dt*1e3:.0f}ms"
+                      + (" STRAGGLER" if slow else ""))
+            if (step + 1) % tcfg.checkpoint_every == 0 or step == tcfg.steps - 1:
+                saver.save(step + 1, {"params": params, "opt": opt_state})
+    finally:
+        # flush the in-flight async write even when a step raises — an
+        # already-snapshotted checkpoint must land atomically so resume sees
+        # the newest completed step, not a torn/missing directory.
+        saver.wait()
     return {"final_loss": losses[-1] if losses else None,
             "losses": losses, "straggler_steps": watch.flagged}
 

@@ -595,6 +595,38 @@ def _vlm_decode(params, h, cache, pos, cfg, ctx, new_cache):
 
 
 # ---------------------------------------------------------------------------
+# serving: multi-step decode (the fused fast-path driver)
+# ---------------------------------------------------------------------------
+
+
+def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
+                    cfg: ArchConfig, ctx: ModelContext):
+    """Greedy-decode ``n_steps`` tokens as ONE ``lax.scan`` over decode_step.
+
+    ``first_tok`` is the token sampled from the prefill logits (shape (B, 1),
+    audio: (B, 1, n_cb)); the emitted sequence starts with it, matching the
+    per-step Python loop this replaces. All tokens accumulate **on device**
+    in the scan's stacked output — the caller does a single device→host
+    transfer for the whole generation instead of one `int(tok[i, 0])` sync
+    per token per sequence.
+
+    Returns (toks, final_cache) with toks (n_steps, B, 1[, n_cb]) int32.
+    """
+
+    def body(carry, _):
+        tok, c = carry
+        logits, c = decode_step(params, c, tok, cfg, ctx)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (nxt, c), tok
+
+    (_, cache), toks = jax.lax.scan(
+        body, (first_tok.astype(jnp.int32), cache), None, length=n_steps,
+        unroll=ctx.unroll,
+    )
+    return toks, cache
+
+
+# ---------------------------------------------------------------------------
 # cache init (decode-only dry-run cells build the cache from specs)
 # ---------------------------------------------------------------------------
 

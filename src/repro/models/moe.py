@@ -227,12 +227,14 @@ def moe_ffn(
             _wspec(params["w_down"], "down", tp),
         )
         out_specs = (P(dp, None, None), P())
-        y, aux = jax.shard_map(
+        from repro.dist.compat import shard_map
+
+        y, aux = shard_map(
             partial(local_moe, tp_size=tp_size, dp=dp),
             mesh=mesh,
             in_specs=in_specs,
             out_specs=out_specs,
-            check_vma=False,
+            check=False,
         )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
     if cfg.n_shared_experts:

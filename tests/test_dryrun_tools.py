@@ -100,7 +100,7 @@ def test_serve_rules_are_tp_only():
 
     # AbstractMesh: production topology without needing 256 real devices
     # (this test runs inside the single-device pytest process)
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
     r_train = d.rules_for(SHAPES["train_4k"], mesh)
     r_dec = d.rules_for(SHAPES["decode_32k"], mesh)
     assert r_train.fsdp is not None

@@ -1,0 +1,239 @@
+"""Fused decode fast-path tests: ReQuant+GEMM fusion parity, autotune
+cache behavior, and the scan-based generation loop.
+
+The fused kernel runs in interpret mode (kernel body executes in Python on
+CPU); parity is asserted three ways:
+  * the int8 activation container is **bitwise identical** to the unfused
+    `act_quant_ref` path (the fusion must not change the quantization);
+  * the fused output matches the `ref.py` oracle pipeline to fp32 tolerance;
+  * the ops-level dispatch (fused vs unfused vs XLA) agrees.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, pack_weight
+from repro.kernels import ops as O
+from repro.kernels import ref as R
+from repro.kernels import tuning
+from repro.kernels.abq_fused import abq_linear_fused_pallas, fits_vmem
+
+
+def _mk(rng, m, k, n, w_bits):
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    pw = pack_weight(w, QuantSpec(bits=w_bits, bit_balance=(w_bits <= 3)))
+    return x, pw
+
+
+# ---------------------------------------------------------------------------
+# fused kernel parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [1, 3, 17])
+@pytest.mark.parametrize("k,n", [(72, 128), (200, 128)])  # K % 32 != 0
+@pytest.mark.parametrize("w_bits", [2, 3, 4, 8])
+def test_fused_requant_gemm_parity(rng, m, k, n, w_bits):
+    x, pw = _mk(rng, m, k, n, w_bits)
+    kp = pw.planes.shape[1] * 32
+    x_pad = jnp.pad(x, ((0, 0), (0, kp - k)))
+
+    out, q, s = abq_linear_fused_pallas(
+        x_pad, pw.planes, pw.scale, pw.zero_point,
+        qmax=127.0, block_m=8, block_n=128, out_dtype=jnp.float32,
+        debug_return_quant=True, interpret=True)
+
+    # (a) int8 container bitwise identical to the unfused quantizer
+    q_ref, s_ref = R.act_quant_ref(x_pad, qmax=127.0)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-6, atol=0)
+
+    # (b) fused output matches the oracle pipeline
+    y_ref = R.abq_matmul_ref(q_ref, s_ref, pw.planes, pw.scale,
+                             pw.zero_point, kp, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("w_bits", [2, 4])
+def test_abq_linear_dispatch_fused_equals_unfused(rng, w_bits):
+    """ops.abq_linear: fused pallas == unfused pallas == fused XLA."""
+    x, pw = _mk(rng, 5, 96, 128, w_bits)
+    kw = dict(out_dtype=jnp.float32)
+    y_fp = O.abq_linear(x, pw, backend="pallas", interpret=True,
+                        fused=True, **kw)
+    y_up = O.abq_linear(x, pw, backend="pallas", interpret=True,
+                        fused=False, **kw)
+    y_fx = O.abq_linear(x, pw, backend="xla", fused=True, **kw)
+    y_ux = O.abq_linear(x, pw, backend="xla", fused=False, **kw)
+    np.testing.assert_allclose(np.asarray(y_fp), np.asarray(y_up),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_fx), np.asarray(y_ux),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_fp), np.asarray(y_fx),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_fused_toggle_env_validation(rng, monkeypatch):
+    x, pw = _mk(rng, 2, 64, 128, 2)
+    monkeypatch.setenv("REPRO_ABQ_FUSED", "0")
+    y0 = O.abq_linear(x, pw, backend="xla", out_dtype=jnp.float32)
+    monkeypatch.setenv("REPRO_ABQ_FUSED", "1")
+    y1 = O.abq_linear(x, pw, backend="xla", out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-6, atol=1e-5)
+    monkeypatch.setenv("REPRO_ABQ_FUSED", "maybe")
+    with pytest.raises(ValueError, match="REPRO_ABQ_FUSED"):
+        O.abq_linear(x, pw, backend="xla", out_dtype=jnp.float32)
+
+
+def test_fused_leading_dims_and_act_inv_s(rng):
+    """apply_linear threads 3-D activations through the fused path."""
+    from repro.models.layers import QuantLinear, apply_linear
+
+    x, pw = _mk(rng, 6, 64, 128, 2)
+    x3 = x.reshape(2, 3, 64)
+    ql = QuantLinear(pw=pw, act_inv_s=None, act_bits=8)
+    y = apply_linear(x3, ql, backend="pallas", interpret=True)
+    y2 = O.abq_linear(x, pw, backend="xla", out_dtype=x.dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32).reshape(6, 128),
+                               np.asarray(y2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fits_vmem_gates_full_k_tiles():
+    assert fits_vmem(8, 4096, 128, 2, tuning.VMEM_BYTES // 4)
+    assert not fits_vmem(256, 65536, 4096, 8, 1 << 20)
+
+
+# ---------------------------------------------------------------------------
+# autotune dispatch cache
+# ---------------------------------------------------------------------------
+
+
+def test_best_blocks_decode_shapes_pick_small_bm():
+    """Decode GEMV/GEMM shapes (M = batch) must select BM <= 32 — the
+    whole point of the decode-shaped path: no padded-row MXU waste."""
+    for m in (1, 4, 8, 32):
+        for k, n in [(4096, 4096), (4096, 11008), (11008, 4096)]:
+            cand = tuning.best_blocks(m, k, n, 2)
+            assert cand.block_m <= 32, (m, k, n, cand)
+    # prefill keeps MXU-saturating tiles
+    assert tuning.best_blocks(4096, 4096, 4096, 2).block_m >= 64
+
+
+def test_best_blocks_is_cached_and_kernel_legal():
+    a = tuning.best_blocks(7, 96, 128, 2)
+    b = tuning.best_blocks(7, 96, 128, 2)
+    assert a is b  # lru_cache hit, not a re-search
+    assert 96 % a.block_k == 0 and a.block_k % 32 == 0
+    assert 128 % a.block_n == 0
+
+
+def test_abq_matmul_autotuned_blocks_match_pinned(rng):
+    """Default (autotuned) block selection changes tiling, not numerics."""
+    from repro.core import act_scales, quantize_act
+
+    x, pw = _mk(rng, 3, 96, 128, 2)
+    aspec = QuantSpec(bits=8, symmetric=True, granularity="per_token")
+    xs = act_scales(x, aspec)
+    xq = quantize_act(x, xs, aspec)
+    y_auto = O.abq_matmul(xq, xs, pw, backend="pallas", interpret=True,
+                          out_dtype=jnp.float32)
+    y_pin = O.abq_matmul(xq, xs, pw, backend="pallas", interpret=True,
+                         block_m=32, block_n=128, block_k=96,
+                         out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_pin),
+                               rtol=1e-6, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# act_qmax / decode_attention mode hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_act_qmax_table():
+    assert O.act_qmax(8) == 127.0
+    assert O.act_qmax(4) == 7.0
+    assert O.act_qmax(3) == 3.0
+    assert O.act_qmax(2) == 1.0
+    assert O.act_qmax(1) == 1.0
+    for bad in (0, 9, -1):
+        with pytest.raises(ValueError):
+            O.act_qmax(bad)
+
+
+def test_decode_attention_rejects_unknown_mode(rng, monkeypatch):
+    q = jnp.asarray(rng.normal(size=(1, 1, 4, 8)).astype(np.float32))
+    kc = jnp.zeros((1, 2, 4, 8), jnp.int8)
+    vc = jnp.zeros((1, 2, 4, 8), jnp.int8)
+    ks = jnp.ones((1, 2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="decode_attention mode"):
+        O.decode_attention(q, kc, vc, ks, ks, fused_dequant="turbo")
+    monkeypatch.setenv("REPRO_DECODE_ATTN", "warp9")
+    with pytest.raises(ValueError, match="REPRO_DECODE_ATTN"):
+        O.decode_attention(q, kc, vc, ks, ks)
+
+
+# ---------------------------------------------------------------------------
+# scan-based generation
+# ---------------------------------------------------------------------------
+
+
+def test_generate_tokens_matches_stepwise_loop(key):
+    """The lax.scan decode loop must emit exactly the tokens the per-step
+    Python loop produced (same cache evolution, same argmax stream)."""
+    from conftest import tiny
+    from repro.models import lm
+    from repro.models.blocks import ModelContext
+    from repro.models.quantized import QuantizeConfig, quantize_model
+
+    cfg = tiny("dense")
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(key, cfg)
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8))
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    n_steps = 5
+
+    logits, cache0 = lm.prefill(qp, tokens, cfg, ctx, max_len=32)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # reference: the old per-step loop
+    ref_toks = []
+    tok, cache = first, cache0
+    for _ in range(n_steps):
+        ref_toks.append(np.asarray(tok))
+        lo, cache = lm.decode_step(qp, cache, tok, cfg, ctx)
+        tok = jnp.argmax(lo, -1).astype(jnp.int32)
+
+    logits2, cache1 = lm.prefill(qp, tokens, cfg, ctx, max_len=32)
+    first2 = jnp.argmax(logits2, -1).astype(jnp.int32)
+    gen, _ = lm.generate_tokens(qp, cache1, first2, n_steps, cfg, ctx)
+    np.testing.assert_array_equal(np.asarray(gen), np.stack(ref_toks))
+
+
+def test_server_generate_single_host_transfer(monkeypatch):
+    """Server.generate moves output tokens device→host exactly once."""
+    import repro.launch.serve as serve_mod
+
+    server = serve_mod.Server(arch="qwen3-4b", smoke=True, w_bits=2,
+                              max_len=64)
+    transfers = {"n": 0}
+    orig = np.asarray
+
+    def counting_asarray(a, *args, **kw):
+        if isinstance(a, jax.Array):
+            transfers["n"] += 1
+        return orig(a, *args, **kw)
+
+    monkeypatch.setattr(serve_mod.np, "asarray", counting_asarray)
+    outs, stats = server.generate([[1, 2, 3], [4, 5]], max_new_tokens=4)
+    assert transfers["n"] == 1
+    assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+    assert all(isinstance(t, int) for o in outs for t in o)

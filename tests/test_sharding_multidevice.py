@@ -31,8 +31,8 @@ from repro.models.blocks import ModelContext
 from repro.models.shardings import param_pspecs, batch_pspecs
 
 out = {}
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.dist.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = ArchConfig(name="t", family="moe", n_layers=2, d_model=64, n_heads=4,
                  n_kv_heads=2, d_ff=128, vocab_size=512, n_experts=4,
                  top_k=2, moe_d_ff=64).with_kv_replication(2)
@@ -79,8 +79,7 @@ out["moe_aux_diff"] = abs(float(aux_local) - float(aux_dist))
 # ---- compression: int8 EF psum == plain mean within quant error;
 # error feedback drives the long-run average error to ~0
 from repro.dist import compression
-mesh_p = jax.make_mesh((2, 4), ("pod", "data"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_p = make_mesh((2, 4), ("pod", "data"))
 g = {"w": jax.random.normal(key, (16,), jnp.float32)}
 err = compression.init_error_state(g)
 with mesh_p:

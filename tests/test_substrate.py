@@ -126,8 +126,9 @@ def test_checkpoint_elastic_reshard(tmp_path, key):
 
     tree = _tree(key)
     ckpt.save(str(tmp_path), 3, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     shardings = jax.tree.map(
         lambda a: NamedSharding(mesh, P(*((None,) * np.ndim(a)))), tree)
     restored = ckpt.restore_like(str(tmp_path), 3, tree, shardings=shardings)
