@@ -1,0 +1,177 @@
+"""Decode-attention benchmark: Pallas flash-decoding vs the jnp int8 path.
+
+Two measurements, written to ``BENCH_decode_attn.json`` so the
+decode-attention perf trajectory is tracked PR over PR (the attention-side
+companion of `bench_decode`'s GEMM-side numbers):
+
+1. **Modeled HBM cache bytes per decoded token** (v5e roofline accounting,
+   `tuning.decode_attn_cost`) at LLaMA-7B attention shapes, S ∈ {512, 2048},
+   swept over valid prefix lengths L ∈ {S/8, S/2, S}. The jnp int8 path
+   always streams the full S cache (the masked tail is read then written
+   off with -1e30) and round-trips the (B, KVH, G, S) logits/probs through
+   HBM; the Pallas kernel fetches ``ceil(L / block_s)`` blocks only
+   (block-skip) and keeps the softmax state in VMEM. The gate: Pallas
+   cache bytes strictly lower wherever L < S, total bytes strictly lower
+   everywhere. ``block_s`` comes from `tuning.best_decode_attn_block` —
+   the bench exercises the same pick serving uses.
+
+2. **Smoke decode throughput** (CPU, tiny model): wall-clock tok/s of
+   `Server.generate` under ``REPRO_DECODE_ATTN`` pallas vs int8 (on CPU the
+   pallas mode falls back to the jnp int8 math, so this guards dispatch
+   overhead), compared against the tok/s recorded in ``BENCH_decode.json``.
+   CPU-indicative only; the modeled bytes carry the TPU claim.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_decode_attn [--no-smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.kernels import tuning
+
+# LLaMA-7B attention at decode: B=4, 32 heads (MHA), head_dim 128
+BATCH = 4
+N_HEADS = 32
+N_KV_HEADS = 32
+HEAD_DIM = 128
+SEQ_LENS = (512, 2048)
+
+# CPU wall-clock slack for the smoke non-regression check (containers are
+# noisy; the modeled bytes are the real gate)
+SMOKE_SLACK = 0.5
+
+
+def jnp_int8_bytes(s: int, valid_len: int) -> dict:
+    """Modeled HBM traffic of the XLA-lowered int8 path for one step.
+
+    Reads the full S cache regardless of ``valid_len`` and materializes the
+    (B, KVH, G, S) intermediates: f32 logits and probs (each written then
+    read back by the next op) plus the re-quantized int8 probs round-trip.
+    """
+    del valid_len  # read-then-mask: the tail is streamed anyway
+    group = N_HEADS // N_KV_HEADS
+    pos_bytes = 2 * HEAD_DIM + 2 * 4  # int8 k+v, f32 k/v scales
+    cache = BATCH * N_KV_HEADS * s * pos_bytes
+    rows = BATCH * N_KV_HEADS * group  # = B*H score rows
+    inter = rows * s * ((4 + 4) * 2 + 1 * 2)  # logits, probs f32 + p_i8 r/w
+    qo = BATCH * N_HEADS * HEAD_DIM * (4 + 4)
+    return {"cache": float(cache), "total": float(cache + inter + qo)}
+
+
+def pallas_bytes(s: int, valid_len: int) -> dict:
+    """Modeled HBM traffic of the flash-decoding kernel for one step:
+    one pass over the valid blocks of the cache, nothing S-sized written."""
+    group = N_HEADS // N_KV_HEADS
+    cand = tuning.best_decode_attn_block(BATCH, N_KV_HEADS, group, s,
+                                         HEAD_DIM)
+    r = tuning.decode_attn_cost(BATCH, N_KV_HEADS, group, s, HEAD_DIM,
+                                block_s=cand.block_s, valid_len=valid_len)
+    qo = BATCH * N_HEADS * HEAD_DIM * (4 + 4)
+    return {"cache": float(r["cache_bytes"]),
+            "total": float(r["cache_bytes"] + qo),
+            "block_s": cand.block_s}
+
+
+def smoke_decode_tok_s(mode: str, gen: int = 8, batch: int = 2) -> float:
+    """Tiny-model wall-clock decode tok/s under one REPRO_DECODE_ATTN mode."""
+    from repro.launch.serve import Server
+
+    prev = os.environ.get("REPRO_DECODE_ATTN")
+    os.environ["REPRO_DECODE_ATTN"] = mode
+    try:
+        server = Server(arch="qwen3-4b", smoke=True, w_bits=4, max_len=64)
+        prompts = [[1, 2, 3, 4]] * batch
+        # warmup at the SAME gen length (n_steps is a static jit arg)
+        server.generate(prompts, max_new_tokens=gen)
+        _, stats = server.generate(prompts, max_new_tokens=gen)
+        return stats["decode_tok_s"]
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_DECODE_ATTN", None)
+        else:
+            os.environ["REPRO_DECODE_ATTN"] = prev
+
+
+def run(print_fn=print, smoke: bool = True,
+        out_path: str = "BENCH_decode_attn.json") -> dict:
+    results: dict = {"shapes": {"batch": BATCH, "n_heads": N_HEADS,
+                                "n_kv_heads": N_KV_HEADS,
+                                "head_dim": HEAD_DIM},
+                     "seq_lens": {}}
+    ok = True
+    for s in SEQ_LENS:
+        rows = {}
+        for valid in (s // 8, s // 2, s):
+            j = jnp_int8_bytes(s, valid)
+            p = pallas_bytes(s, valid)
+            per_tok_j = j["total"] / BATCH
+            per_tok_p = p["total"] / BATCH
+            cache_ok = p["cache"] < j["cache"] if valid < s \
+                else p["cache"] <= j["cache"]
+            total_ok = p["total"] < j["total"]
+            ok = ok and cache_ok and total_ok
+            rows[f"L{valid}"] = {
+                "valid_len": valid,
+                "block_s": p["block_s"],
+                "cache_bytes_jnp_int8": j["cache"],
+                "cache_bytes_pallas": p["cache"],
+                "bytes_per_token_jnp_int8": per_tok_j,
+                "bytes_per_token_pallas": per_tok_p,
+                "cache_saved_frac": 1.0 - p["cache"] / j["cache"],
+                "total_saved_frac": 1.0 - per_tok_p / per_tok_j,
+            }
+            print_fn(
+                f"decode_attn_bytes,S={s},L={valid},bs={p['block_s']},"
+                f"jnp={per_tok_j:.3e},pallas={per_tok_p:.3e},"
+                f"cache_saved={rows[f'L{valid}']['cache_saved_frac']*100:.1f}%,"
+                f"{'PASS' if cache_ok and total_ok else 'FAIL'}")
+        results["seq_lens"][str(s)] = rows
+
+    results["pallas_strictly_fewer_bytes"] = ok
+    print_fn(f"decode_attn_check,pallas_bytes_strictly_lower,"
+             f"{'PASS' if ok else 'FAIL'}")
+
+    if smoke:
+        tp = smoke_decode_tok_s("pallas")
+        ti = smoke_decode_tok_s("int8")
+        results["smoke_tok_s_pallas"] = tp
+        results["smoke_tok_s_int8"] = ti
+        baseline = None
+        if os.path.exists("BENCH_decode.json"):
+            with open("BENCH_decode.json") as f:
+                prev = json.load(f)
+            vals = [c.get("smoke_tok_s_fused")
+                    for c in prev.get("configs", {}).values()
+                    if c.get("smoke_tok_s_fused")]
+            baseline = min(vals) if vals else None
+        not_regressed = (baseline is None
+                         or tp >= SMOKE_SLACK * baseline)
+        results["smoke_baseline_tok_s"] = baseline
+        results["smoke_not_regressed"] = not_regressed
+        print_fn(f"decode_attn_smoke,pallas_tok_s={tp:.1f},"
+                 f"int8_tok_s={ti:.1f},baseline={baseline},"
+                 f"{'PASS' if not_regressed else 'FAIL'}  (CPU-indicative)")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print_fn(f"decode_attn_bench,wrote={out_path}")
+    return results
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--no-smoke", action="store_true",
+                   help="skip the tiny-model wall-clock section")
+    p.add_argument("--out", default="BENCH_decode_attn.json")
+    args = p.parse_args(argv)
+    r = run(smoke=not args.no_smoke, out_path=args.out)
+    return 0 if r["pallas_strictly_fewer_bytes"] else 1
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

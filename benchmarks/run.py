@@ -16,11 +16,60 @@ import sys
 import time
 
 
+def decode_byte_sections(smoke: bool, section=None) -> list[str]:
+    """The decode fast-path byte gates, shared by the full run and --check:
+    fused ReQuant+GEMM and Pallas decode-attention must model strictly
+    fewer HBM bytes than their baselines (plus, with ``smoke``, the
+    decode-attention tok/s non-regression check). Smoke-less runs write to
+    a scratch dir so the tracked BENCH_*.json (which carry the smoke tok/s
+    history) are never clobbered."""
+    from benchmarks import bench_decode, bench_decode_attn
+
+    if smoke:
+        bench_dir = ""
+    else:
+        import tempfile
+
+        bench_dir = tempfile.mkdtemp(prefix="repro_bench_bytes_") + "/"
+    section = section or (lambda title: None)
+    failures = []
+
+    section("Fused decode fast-path: ReQuant+GEMM bytes/token & tok/s")
+    r = bench_decode.run(smoke=smoke,
+                         out_path=f"{bench_dir}BENCH_decode.json")
+    if not r["fused_strictly_fewer_bytes"]:
+        failures.append("decode_fused_bytes")
+
+    section("Decode-attention fast-path: flash-decoding cache bytes/token")
+    r = bench_decode_attn.run(smoke=smoke,
+                              out_path=f"{bench_dir}BENCH_decode_attn.json")
+    if not r["pallas_strictly_fewer_bytes"]:
+        failures.append("decode_attn_pallas_bytes")
+    if not r.get("smoke_not_regressed", True):
+        failures.append("decode_attn_smoke")
+    return failures
+
+
+def check_bytes() -> int:
+    """CI gate (--check): exits nonzero on any byte-model regression."""
+    failures = decode_byte_sections(smoke=False)
+    print(f"byte-model check: "
+          f"{'ALL PASS' if not failures else 'FAILURES: ' + str(failures)}")
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--fast", action="store_true",
                    help="skip the trained-model PPL section (slowest)")
+    p.add_argument("--check", action="store_true",
+                   help="byte-model regression gate only: exit nonzero if a "
+                        "fused/pallas mode stops being strictly-fewer-bytes "
+                        "than its baseline")
     args = p.parse_args(argv)
+
+    if args.check:
+        return check_bytes()
 
     t0 = time.time()
     failures = []
@@ -49,12 +98,7 @@ def main(argv=None) -> int:
     if not (r["ratio_fp16"] > 3.0 and r["ratio_w8a8"] > 1.8):
         failures.append("e2e_memory")
 
-    section("Fused decode fast-path: ReQuant+GEMM bytes/token & tok/s")
-    from benchmarks import bench_decode
-
-    r = bench_decode.run(smoke=not args.fast)
-    if not r["fused_strictly_fewer_bytes"]:
-        failures.append("decode_fused_bytes")
+    failures += decode_byte_sections(smoke=not args.fast, section=section)
 
     if not args.fast:
         section("Tables 1/2/5/6/7 analogue: quantization-config perplexity"

@@ -2,8 +2,10 @@
 
 Kernels:
   abq_matmul        — arbitrary-bit quantized GEMM (the paper's ABQKernel)
+  abq_fused         — ReQuant+GEMM fusion (the decode linear fast-path)
   act_quant         — fused per-token ReQuant
   flash_attention   — causal GQA flash attention for prefill
+  decode_attn       — flash-decoding over the int8 KV cache (decode)
 """
 
 from repro.kernels.ops import (

@@ -1,0 +1,224 @@
+"""Flash-decoding over the int8 KV cache as a Pallas TPU kernel.
+
+The jnp decode-attention path (`ops.decode_attention` modes "int8"/"fold"/
+"naive") is XLA-lowered: it materializes the (B, KVH, G, S) logits and probs
+in HBM, always reads the full S-length cache (the masked tail is fetched and
+then written off with -1e30), and round-trips the re-quantized probs. This
+kernel is the flash-decoding form of the same math, built so the int8 cache
+is streamed HBM→VMEM **exactly once per step** and nothing S-sized ever goes
+back to HBM:
+
+* **Grid** is (B·KVH, S/block_s): one program row per KV head, a sequential
+  sweep over S-blocks. The G = H/KVH query rows of a KV head are batched
+  into a single (G, D) MXU tile — GQA without a repeated cache read.
+* **In-VMEM dequant**: the per-token k/v scales ride along as (1, block_s)
+  f32 rows; the int8→float conversion happens on the VPU against the VMEM
+  tile. No f32 copy of the cache (4x its bytes) is ever materialized.
+* **Fully-integer BMMs** (the paper's int8 attention regime): q is
+  re-quantized per row to int8 once per block and contracted against the
+  int8 K tile on the MXU (int32 accumulate); the softmax probs are folded
+  with v_scale and re-quantized per row for the int8 PV contraction.
+* **Online softmax**: running (max, sum, acc) live in VMEM scratch across
+  the S sweep (split-S partial reduction), exactly the FlashAttention-2
+  state machine restricted to Sq = 1.
+* **length-aware block skipping**: the valid prefix length is a
+  scalar-prefetch operand. S-blocks entirely past ``length`` are skipped
+  two ways: the kv index maps clamp the block index to the last valid
+  block (consecutive identical indices → the pipeline issues no new DMA,
+  the tail is never fetched) and ``pl.when`` guards the body (the tail is
+  never computed either). The jnp paths read those bytes and mask them.
+
+Semantics note: ``length == 0`` produces a zero output row (attention over
+an empty prefix). The jnp paths degenerate to a uniform average over the
+whole cache there (softmax of an all ``-1e30`` row); decode never hits this
+(the current token is always written before attending), but the kernel's
+convention is the defensible one and is pinned by a test.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dist.compat import tpu_compiler_params
+from repro.kernels.ref import requant_rows
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+_CompilerParams = tpu_compiler_params()
+
+
+def _decode_attn_kernel(
+    len_ref,  # scalar prefetch: (B*KVH,) int32 valid prefix lengths
+    q_ref,  # (1, G, D) f32 (pre-scaled by 1/sqrt(D))
+    k_ref,  # (1, BS, D) int8
+    ks_ref,  # (1, BS) f32 per-token K scales
+    v_ref,  # (1, BS, D) int8
+    vs_ref,  # (1, BS) f32 per-token V scales
+    o_ref,  # (1, G, D) out dtype
+    m_ref,  # VMEM (G, 1) f32 running max
+    l_ref,  # VMEM (G, 1) f32 running sum
+    acc_ref,  # VMEM (G, D) f32 running output
+    qi_ref,  # VMEM (G, D) int8 re-quantized q (computed once per row)
+    qs_ref,  # VMEM (G, 1) f32 q dequant scales
+    *,
+    block_s: int,
+    s_steps: int,
+):
+    bh = pl.program_id(0)
+    si = pl.program_id(1)
+    length = len_ref[bh]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # per-row int8 re-quantization of q, once per (batch, kv-head) row —
+        # q is invariant across the S sweep, so it stays in VMEM scratch.
+        # requant_rows is THE quantization core (see ref.py): same bitwise
+        # container as every other quant path in the repo.
+        q_i8, q_s = requant_rows(q_ref[0], 127.0)
+        qi_ref[...] = q_i8
+        qs_ref[...] = q_s
+
+    # blocks entirely past the valid prefix: no compute (and, via the
+    # clamped index maps, no fetch)
+    @pl.when(si * block_s < length)
+    def _body():
+        # int8 QK BMM: the re-quantized q against the int8 K tile
+        logits_i = jax.lax.dot_general(
+            qi_ref[...], k_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (G, BS)
+        # in-VMEM dequant: per-token K scale applied to the int32 logits
+        logits = logits_i.astype(jnp.float32) * (qs_ref[...] * ks_ref[...])
+        cols = si * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 1)
+        valid = cols < length
+        logits = jnp.where(valid, logits, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+        # int8 PV BMM: fold the per-token V scale into the probs, re-quantize
+        # per row, contract on the int8 unit, dequant the partial
+        pv_f = jnp.where(valid, p * vs_ref[...], 0.0)  # (G, BS)
+        p_amax = jnp.max(jnp.abs(pv_f), axis=-1, keepdims=True)
+        p_s = jnp.maximum(p_amax, 1e-12) / 127.0
+        p_i8 = jnp.clip(jnp.round(pv_f / p_s), -127, 127).astype(jnp.int8)
+        pv_i = jax.lax.dot_general(
+            p_i8, v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (G, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv_i.astype(jnp.float32) * p_s
+        m_ref[...] = m_new
+
+    @pl.when(si == s_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret"),
+)
+def decode_attention_pallas(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_scale: Array,
+    v_scale: Array,
+    *,
+    scale: float,
+    length: Array | None = None,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """Single-token attention over the int8 cache, one HBM pass.
+
+    q:        (B, 1, H, D) float
+    k_cache:  (B, KVH, S, D) int8 (attention-native layout)
+    k_scale:  (B, KVH, S) f32 per-token-per-head dequant scales
+    length:   (B,) int32 valid prefix length, or None for the full S
+    block_s:  S-tile length; must divide S (use
+              `tuning.best_decode_attn_block` for the roofline pick)
+
+    Returns (B, 1, H, D) in q's dtype.
+    """
+    b, _, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+    if s_len % block_s:
+        raise ValueError(f"S={s_len} must tile by block_s={block_s}")
+    s_steps = s_len // block_s
+
+    # fold (B, KVH) into one grid axis; G query rows share one program row
+    qt = (q.astype(jnp.float32) * scale).reshape(b * kvh, group, d)
+    kt = k_cache.reshape(b * kvh, s_len, d)
+    vt = v_cache.reshape(b * kvh, s_len, d)
+    kst = k_scale.astype(jnp.float32).reshape(b * kvh, s_len)
+    vst = v_scale.astype(jnp.float32).reshape(b * kvh, s_len)
+    if length is None:
+        lens = jnp.full((b * kvh,), s_len, jnp.int32)
+    else:
+        lens = jnp.repeat(length.astype(jnp.int32), kvh)
+
+    def _clamp(si, lb_ref, bh):
+        # last valid block for this row; revisiting it on tail iterations
+        # means the mapped index never changes -> no tail DMA is issued
+        n_blocks = jax.lax.div(lb_ref[bh] + block_s - 1, block_s)
+        return jnp.minimum(si, jnp.maximum(n_blocks - 1, 0))
+
+    def q_map(bh, si, lb_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, si, lb_ref):
+        return (bh, _clamp(si, lb_ref, bh), 0)
+
+    def sc_map(bh, si, lb_ref):
+        return (bh, _clamp(si, lb_ref, bh))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvh, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, group, d), q_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, d), jnp.int8),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, block_s=block_s, s_steps=s_steps,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, group, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lens, qt, kt, kst, vt, vst)
+    return out.reshape(b, kvh, group, d).reshape(b, 1, h, d)

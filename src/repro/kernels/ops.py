@@ -19,8 +19,11 @@ A/B toggles (all also take explicit keyword args that win over the env):
   through the fused ReQuant+GEMM kernel (`abq_fused.py`): the int8
   activation container never round-trips HBM between the quantizer and the
   GEMM. "0" restores the two-kernel act_quant → abq_matmul baseline.
-* ``REPRO_DECODE_ATTN`` ∈ {"int8", "fold", "naive"} — decode-attention
-  dequant strategy (§Perf iterations; see `decode_attention`).
+* ``REPRO_DECODE_ATTN`` ∈ {"pallas" (default), "int8", "fold", "naive"} —
+  decode-attention strategy (§Perf iterations; see `decode_attention`).
+  "pallas" is the flash-decoding kernel over the int8 cache
+  (`decode_attn.py`); it falls back to the jnp "int8" math off-TPU unless
+  ``interpret`` is set.
 
 Block sizes: when the caller does not pin (block_m, block_n, block_k), the
 pallas paths ask `tuning.best_blocks` — a cached per-(M, K, N, w_bits)
@@ -43,6 +46,7 @@ from repro.kernels import tuning
 from repro.kernels.abq_fused import abq_linear_fused_pallas, fits_vmem
 from repro.kernels.abq_matmul import abq_matmul_pallas
 from repro.kernels.act_quant import act_quant_pallas
+from repro.kernels.decode_attn import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
 Array = jax.Array
@@ -298,11 +302,14 @@ def abq_linear(
 # attention
 # ---------------------------------------------------------------------------
 
-# decode-attention dequant strategies (§Perf iterations, kept for A/B):
-#   int8  — fully-integer QK/PV contractions, scales applied to logits/probs
-#   fold  — f32 contractions with the dequant scale folded out (iteration 1)
-#   naive — dequantize the cache to f32, then attend (baseline)
-DECODE_ATTN_MODES = ("int8", "fold", "naive")
+# decode-attention strategies (§Perf iterations, kept for A/B):
+#   pallas — flash-decoding Pallas kernel over the int8 cache (iteration 4):
+#            one HBM pass, VMEM online softmax, length-aware block skip
+#   int8   — fully-integer QK/PV contractions, scales applied to logits/probs
+#            (XLA-lowered; the non-TPU fallback for "pallas")
+#   fold   — f32 contractions with the dequant scale folded out (iteration 1)
+#   naive  — dequantize the cache to f32, then attend (baseline)
+DECODE_ATTN_MODES = ("pallas", "int8", "fold", "naive")
 
 
 def _flash_xla(
@@ -428,6 +435,9 @@ def decode_attention(
     scale: Optional[float] = None,
     length: Optional[Array] = None,
     fused_dequant: Optional[bool] = None,
+    backend: str = "auto",
+    interpret: bool = False,
+    block_s: Optional[int] = None,
 ) -> Array:
     """Single-token attention over a (possibly int8-quantized) KV cache.
 
@@ -439,6 +449,15 @@ def decode_attention(
 
     Memory-bound op: the dominant bytes are the cache read.
 
+    §Perf iteration 4 ("pallas", the default): the flash-decoding Pallas
+    kernel (`kernels/decode_attn.py`) streams the int8 cache HBM→VMEM once
+    per step — online softmax in VMEM scratch (no (B,KVH,G,S) logits/probs
+    round-trip), per-token dequant on the VPU, int8 QK/PV MXU contractions,
+    and ``length``-aware S-block skipping so the masked tail is never
+    fetched. ``block_s`` defaults to `tuning.best_decode_attn_block`'s
+    cache-bytes roofline pick. Off-TPU (and not ``interpret``) it falls
+    back to the jnp "int8" path below, which is the same math XLA-lowered.
+
     fused_dequant=True (§Perf iteration 1): contract q directly against the
     int8 cache and apply the per-token scale to the (B,KVH,G,S) logits /
     fold v_scale into the probs — the f32 dequantized cache copy (4× the
@@ -446,13 +465,15 @@ def decode_attention(
     along the contracted D axis. fused_dequant=False keeps the naive
     dequant-then-attend path (the pre-iteration baseline, kept for A/B).
 
-    Mode resolution: explicit ``fused_dequant`` (bool) wins; otherwise the
-    ``REPRO_DECODE_ATTN`` env var picks one of ``DECODE_ATTN_MODES``
-    ("int8" default, "fold", "naive"); anything else raises.
+    Mode resolution: explicit ``fused_dequant`` (bool → "int8"/"naive",
+    or a mode string) wins; otherwise the ``REPRO_DECODE_ATTN`` env var
+    picks one of ``DECODE_ATTN_MODES`` ("pallas" default); anything else
+    raises. An int8 cache with missing scales raises — silently attending
+    over raw int8 container values is never meaningful.
     """
     mode = fused_dequant
     if mode is None:  # A/B toggle for §Perf iterations
-        mode = os.environ.get("REPRO_DECODE_ATTN", "int8")
+        mode = os.environ.get("REPRO_DECODE_ATTN", "pallas")
     if mode is True:
         mode = "int8"
     elif mode is False:
@@ -461,11 +482,32 @@ def decode_attention(
         raise ValueError(
             f"decode_attention mode {mode!r} not in {DECODE_ATTN_MODES} "
             "(check REPRO_DECODE_ATTN)")
+    if k_cache.dtype == jnp.int8 and (k_scale is None or v_scale is None):
+        missing = "k_scale" if k_scale is None else "v_scale"
+        raise ValueError(
+            f"decode_attention: int8 KV cache but {missing} is None — the "
+            "per-token dequant scales are required to interpret the int8 "
+            "container (pass the scales quantize_kv_cached produced)")
     b, _, h, d = q.shape
     kvh, s_len = k_cache.shape[1], k_cache.shape[2]
     group = h // kvh
     if scale is None:
         scale = 1.0 / (d**0.5)
+
+    if mode == "pallas" and k_cache.dtype == jnp.int8:
+        # the Pallas kernel needs a real TPU lowering (or the interpreter);
+        # elsewhere the jnp int8 path below is the same math, XLA-lowered
+        if _resolve(backend) == "pallas" or interpret:
+            if block_s is None:
+                block_s = tuning.best_decode_attn_block(
+                    b, kvh, group, s_len, d).block_s
+            return decode_attention_pallas(
+                q, k_cache, v_cache, k_scale, v_scale,
+                scale=scale, length=length, block_s=block_s,
+                interpret=interpret,
+            )
+        mode = "int8"
+
     qf = q.astype(jnp.float32).reshape(b, kvh, group, d) * scale
 
     if mode == "int8" and k_cache.dtype == jnp.int8 and k_scale is not None:

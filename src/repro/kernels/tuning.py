@@ -20,6 +20,11 @@ restricted to tile shapes the Pallas kernel accepts (BK | K, BK % 32 == 0,
 BN | N), used by `repro.kernels.ops.abq_matmul` / `abq_linear` whenever the
 caller does not pin blocks explicitly. `benchmarks/bench_kernel_ablation.py`
 (Table 4 analogue) uses the raw ``auto_tune`` search.
+
+``best_decode_attn_block`` is the same idea for the decode-attention kernel
+(`kernels/decode_attn.py`): a per-(B, KVH, G, S, D) cached block-S pick
+ranked by the cache-bytes roofline (`decode_attn_cost`), balancing tail-byte
+waste at short valid prefixes against per-grid-step overhead at long S.
 """
 
 from __future__ import annotations
@@ -107,6 +112,87 @@ def auto_tune(
             best = cand
     if best is None:
         raise ValueError(f"no feasible block config for ({m},{k},{n})")
+    return best
+
+
+# ---------------------------------------------------------------------------
+# decode-attention shape class (block-S selection for kernels/decode_attn.py)
+# ---------------------------------------------------------------------------
+
+_BS_CANDIDATES = (128, 256, 512, 1024, 2048)
+# fixed per-grid-step cost (DMA issue; the grid itself is pipelined so the
+# marginal cost is small); penalizes tiny S-blocks at long S the same way
+# m_pad penalizes oversized BM in the GEMM search
+GRID_STEP_US = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeAttnCandidate:
+    block_s: int
+    t_us: float
+    cache_bytes: float
+    vmem_bytes: float
+
+
+def decode_attn_cost(batch: int, kvh: int, group: int, s: int, d: int, *,
+                     block_s: int, valid_len: Optional[int] = None) -> dict:
+    """Roofline cost of one decode-attention step at one S-tile size.
+
+    Mirrors `model_cost`'s padding logic on the sequence axis: the kernel
+    fetches whole S-blocks, so a ``valid_len`` prefix costs
+    ``ceil(valid_len / block_s) * block_s`` positions of cache stream —
+    oversizing block_s wastes tail bytes exactly like oversizing BM wastes
+    padded GEMV rows. Every grid step (skipped or not) pays GRID_STEP_US,
+    which is what keeps the search off degenerate 1-row tiles.
+    """
+    valid_len = s if valid_len is None else valid_len
+    rows = batch * kvh
+    fetched = (max(valid_len, 1) + block_s - 1) // block_s * block_s
+    fetched = min(fetched, s)
+    pos_bytes = 2 * d + 2 * 4  # int8 k + int8 v + f32 k/v scales per position
+    cache_bytes = rows * fetched * pos_bytes
+    qo_bytes = rows * group * d * (4 + 4)  # q read + out write, f32
+    total_bytes = cache_bytes + qo_bytes
+    ops = 2.0 * rows * fetched * group * d * 2  # QK + PV int8 BMMs
+    t_mem = total_bytes / HBM_BW
+    t_cmp = ops / INT8_PEAK
+    t_grid = rows * (s // block_s) * GRID_STEP_US * 1e-6
+    t = max(t_mem, t_cmp) + t_grid
+    # double-buffered k/v tiles + scale rows, plus the resident q/acc state
+    vmem = 2 * (2 * block_s * d + 2 * 4 * block_s) + group * d * (4 + 4 + 4)
+    return {"t_us": t * 1e6, "cache_bytes": cache_bytes, "vmem": vmem}
+
+
+@functools.lru_cache(maxsize=4096)
+def best_decode_attn_block(batch: int, kvh: int, group: int, s: int,
+                           d: int) -> DecodeAttnCandidate:
+    """Cached block_s pick for one decode-attention shape class.
+
+    Candidates are restricted to tiles the kernel accepts (block_s | S).
+    The cost is averaged over representative valid-prefix lengths
+    (S/8, S/2, S) so the pick balances tail-byte waste at short prefixes
+    (favors small blocks) against grid-step overhead at long S (favors
+    large blocks) — the cache-bytes analogue of the GEMM search's
+    decode-vs-prefill regimes.
+    """
+    cands = sorted({c for c in _BS_CANDIDATES if c <= s and s % c == 0} | {s})
+    best: Optional[DecodeAttnCandidate] = None
+    lens = sorted({max(s // 8, 1), max(s // 2, 1), s})
+    for bs in cands:
+        rs = [decode_attn_cost(batch, kvh, group, s, d, block_s=bs,
+                               valid_len=ln) for ln in lens]
+        if rs[0]["vmem"] > VMEM_BYTES // 4:
+            continue
+        t = sum(r["t_us"] for r in rs) / len(rs)
+        # lens is sorted with s last: rs[-1] is the full-length cost
+        cand = DecodeAttnCandidate(bs, t, rs[-1]["cache_bytes"],
+                                   rs[0]["vmem"])
+        if best is None or cand.t_us < best.t_us:
+            best = cand
+    if best is None:
+        raise ValueError(
+            f"no feasible decode-attn block for (B={batch},KVH={kvh},"
+            f"G={group},S={s},D={d})")
     return best
 
 

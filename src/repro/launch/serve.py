@@ -48,19 +48,24 @@ class Server:
                                    bit_balance=(w_bits <= 3))
         self.params = quantize_model(fp_params, self.cfg, self.qcfg)
         self.weight_mb = quantized_bytes(self.params) / 1e6
-        # n_steps is static (scan length); jit re-specializes per value.
+        # n_steps and top_k are static (scan length / lax.top_k width); jit
+        # re-specializes per value. key=None (greedy) is a static pytree
+        # structure, so greedy and sampling get separate specializations.
         self._generate = jax.jit(
-            lambda qp, c, t, n: lm.generate_tokens(
-                qp, c, t, n, self.cfg, self.ctx),
-            static_argnums=3,
+            lambda qp, c, t, n, key, temp, top_k: lm.generate_tokens(
+                qp, c, t, n, self.cfg, self.ctx, key=key,
+                temperature=temp, top_k=top_k),
+            static_argnums=(3, 6),
         )
+        self._sample_calls = 0
 
     def generate(self, prompts: list[list[int]], *, max_new_tokens: int = 32,
-                 greedy: bool = True):
-        """Prefill + scan-decode. Greedy only (``greedy`` kept for API
-        stability). Output tokens make exactly ONE device→host transfer."""
-        if not greedy:
-            raise NotImplementedError("sampling decode is an open item")
+                 greedy: bool = True, temperature: float = 1.0,
+                 top_k: int = 0, seed: Optional[int] = None):
+        """Prefill + scan-decode. ``greedy=False`` temperature/top-k samples
+        (the PRNG key rides the scan carry — see `lm.generate_tokens`);
+        ``seed`` pins the stream, else each call advances an internal
+        counter. Output tokens make exactly ONE device→host transfer."""
         cfg, ctx = self.cfg, self.ctx
         b = len(prompts)
         plen = max(len(q) for q in prompts)
@@ -75,9 +80,22 @@ class Server:
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
 
-        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        if greedy:
+            first = jnp.argmax(logits, -1).astype(jnp.int32)
+            key = None
+        else:
+            if seed is None:
+                seed = self._sample_calls
+                self._sample_calls += 1
+            key = jax.random.PRNGKey(seed)
+            key, sub = jax.random.split(key)
+            first = lm.sample_logits(logits, sub, temperature=temperature,
+                                     top_k=top_k,
+                                     vocab_size=cfg.vocab_size)
         t0 = time.time()
-        gen, cache = self._generate(self.params, cache, first, max_new_tokens)
+        gen, cache = self._generate(self.params, cache, first, max_new_tokens,
+                                    key, jnp.asarray(temperature, jnp.float32),
+                                    top_k)
         gen_np = np.asarray(gen)  # the one device→host transfer
         t_decode = time.time() - t0
 

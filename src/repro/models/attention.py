@@ -200,6 +200,9 @@ def attend_decode(
         "v_scale": write(layer_cache["v_scale"],
                          vs.astype(layer_cache["v_scale"].dtype), 2),
     }
+    # length = pos + 1 is what makes the Pallas fast-path's S-block skip
+    # reachable from the serving scan: early decode steps only stream the
+    # blocks covering the valid prefix, not the whole max_len cache
     length = jnp.full((b,), pos + 1, jnp.int32)
     out = kops.decode_attention(
         q,
@@ -208,6 +211,8 @@ def attend_decode(
         new_cache["k_scale"],
         new_cache["v_scale"],
         length=length,
+        backend=backend,
+        interpret=interpret,
     )
     out = out.reshape(b, 1, cfg.n_heads * cfg.resolved_head_dim)
     out = apply_linear(out, params["wo"], backend=backend, interpret=interpret)

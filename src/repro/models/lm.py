@@ -570,8 +570,13 @@ def _vlm_decode(params, h, cache, pos, cfg, ctx, new_cache):
         hd = cfg.resolved_head_dim
         q = apply_linear(xn, cp["attn"]["wq"], **ctx.kw).reshape(
             bq, 1, cfg.n_heads, hd)
+        # image K/V are fully valid: length = T keeps the Pallas fast-path's
+        # block-skip machinery uniform across self- and cross-attention
+        t_img = cc["k"].shape[2]
         a = kops.decode_attention(q, cc["k"], cc["v"], cc["k_scale"],
-                                  cc["v_scale"])
+                                  cc["v_scale"],
+                                  length=jnp.full((bq,), t_img, jnp.int32),
+                                  **ctx.kw)
         a = a.reshape(bq, 1, cfg.n_heads * hd)
         a = apply_linear(a, cp["attn"]["wo"], **ctx.kw)
         x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * a
@@ -599,9 +604,32 @@ def _vlm_decode(params, h, cache, pos, cfg, ctx, new_cache):
 # ---------------------------------------------------------------------------
 
 
+def sample_logits(logits: Array, key: Array, *, temperature: float = 1.0,
+                  top_k: int = 0,
+                  vocab_size: Optional[int] = None) -> Array:
+    """Temperature / top-k sampling over the last axis. ``top_k <= 0``
+    samples the full distribution; ``top_k == 1`` is argmax (greedy).
+
+    ``vocab_size`` masks the padding columns of a ``padded_vocab``-wide
+    head: those logits come from untrained rows, and temperature sampling
+    would otherwise give them real probability (greedy argmax rarely picks
+    them, but sampled ids >= vocab_size have no detokenization)."""
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < lf.shape[-1]:
+        pad = jnp.arange(lf.shape[-1]) >= vocab_size
+        lf = jnp.where(pad, -1e30, lf)
+    lf = lf / jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+    if top_k and top_k > 0:
+        kth = jax.lax.top_k(lf, min(top_k, lf.shape[-1]))[0][..., -1:]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
 def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
-                    cfg: ArchConfig, ctx: ModelContext):
-    """Greedy-decode ``n_steps`` tokens as ONE ``lax.scan`` over decode_step.
+                    cfg: ArchConfig, ctx: ModelContext, *,
+                    key: Optional[Array] = None, temperature: float = 1.0,
+                    top_k: int = 0):
+    """Decode ``n_steps`` tokens as ONE ``lax.scan`` over decode_step.
 
     ``first_tok`` is the token sampled from the prefill logits (shape (B, 1),
     audio: (B, 1, n_cb)); the emitted sequence starts with it, matching the
@@ -610,17 +638,30 @@ def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
     transfer for the whole generation instead of one `int(tok[i, 0])` sync
     per token per sequence.
 
+    ``key=None`` decodes greedily (argmax). With a PRNG key, the key rides
+    the scan carry (split once per step, all still on device) and each step
+    temperature/top-k samples via `sample_logits` — the sampling path costs
+    zero extra host syncs. ``temperature``/``top_k`` only apply when a key
+    is given.
+
     Returns (toks, final_cache) with toks (n_steps, B, 1[, n_cb]) int32.
     """
+    greedy = key is None
 
     def body(carry, _):
-        tok, c = carry
+        tok, c, k = carry
         logits, c = decode_step(params, c, tok, cfg, ctx)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        return (nxt, c), tok
+        if greedy:
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        else:
+            k, sub = jax.random.split(k)
+            nxt = sample_logits(logits, sub, temperature=temperature,
+                                top_k=top_k, vocab_size=cfg.vocab_size)
+        return (nxt, c, k), tok
 
-    (_, cache), toks = jax.lax.scan(
-        body, (first_tok.astype(jnp.int32), cache), None, length=n_steps,
+    k0 = jax.random.PRNGKey(0) if greedy else key
+    (_, cache, _), toks = jax.lax.scan(
+        body, (first_tok.astype(jnp.int32), cache, k0), None, length=n_steps,
         unroll=ctx.unroll,
     )
     return toks, cache
