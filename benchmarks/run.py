@@ -50,9 +50,40 @@ def decode_byte_sections(smoke: bool, section=None) -> list[str]:
     return failures
 
 
+def serving_section(smoke: bool, section=None) -> list[str]:
+    """Continuous-batching regression gate, shared by the full run and
+    --check: the engine must model >= 1.5x static-batcher throughput on
+    the Poisson workload (slot-step account; deterministic), and with
+    ``smoke`` must hit >= 1.5x wall-clock on the tiny model too.
+    Smoke-less runs write to scratch (tracked BENCH_serving.json keeps its
+    smoke history)."""
+    from benchmarks import bench_serving
+
+    if smoke:
+        bench_dir = ""
+    else:
+        import tempfile
+
+        bench_dir = tempfile.mkdtemp(prefix="repro_bench_serving_") + "/"
+    section = section or (lambda title: None)
+    failures = []
+
+    section("Continuous batching: engine vs static batcher (Poisson arrivals)")
+    r = bench_serving.run(smoke=smoke,
+                          out_path=f"{bench_dir}BENCH_serving.json")
+    if not r["modeled_speedup_ok"]:
+        failures.append("serving_modeled_speedup")
+    # wall-clock gate is slacked (CPU noise) — the modeled gate above is
+    # the deterministic one; the >= 1.5x smoke claim lives in the artifact
+    if smoke and not r.get("smoke_not_regressed", True):
+        failures.append("serving_smoke_regressed")
+    return failures
+
+
 def check_bytes() -> int:
-    """CI gate (--check): exits nonzero on any byte-model regression."""
-    failures = decode_byte_sections(smoke=False)
+    """CI gate (--check): exits nonzero on any byte/slot-step-model
+    regression."""
+    failures = decode_byte_sections(smoke=False) + serving_section(smoke=False)
     print(f"byte-model check: "
           f"{'ALL PASS' if not failures else 'FAILURES: ' + str(failures)}")
     return 1 if failures else 0
@@ -99,6 +130,7 @@ def main(argv=None) -> int:
         failures.append("e2e_memory")
 
     failures += decode_byte_sections(smoke=not args.fast, section=section)
+    failures += serving_section(smoke=not args.fast, section=section)
 
     if not args.fast:
         section("Tables 1/2/5/6/7 analogue: quantization-config perplexity"

@@ -163,17 +163,21 @@ def decode_attn_cost(batch: int, kvh: int, group: int, s: int, d: int, *,
     return {"t_us": t * 1e6, "cache_bytes": cache_bytes, "vmem": vmem}
 
 
-@functools.lru_cache(maxsize=4096)
-def best_decode_attn_block(batch: int, kvh: int, group: int, s: int,
-                           d: int) -> DecodeAttnCandidate:
-    """Cached block_s pick for one decode-attention shape class.
+def _search_decode_attn_block(
+    batch: int, kvh: int, group: int, s: int, d: int,
+    measure: Optional[Callable[[int], float]] = None,
+) -> DecodeAttnCandidate:
+    """block_s search shared by the modeled (cached) and measured paths.
 
-    Candidates are restricted to tiles the kernel accepts (block_s | S).
-    The cost is averaged over representative valid-prefix lengths
-    (S/8, S/2, S) so the pick balances tail-byte waste at short prefixes
-    (favors small blocks) against grid-step overhead at long S (favors
-    large blocks) — the cache-bytes analogue of the GEMM search's
-    decode-vs-prefill regimes.
+    Candidates are restricted to tiles the kernel accepts (block_s | S) and
+    that fit the VMEM budget; the roofline cost is averaged over
+    representative valid-prefix lengths (S/8, S/2, S) so the modeled pick
+    balances tail-byte waste at short prefixes (favors small blocks)
+    against grid-step overhead at long S (favors large blocks) — the
+    cache-bytes analogue of the GEMM search's decode-vs-prefill regimes.
+    A ``measure`` callable (block_s -> time, any consistent unit) replaces
+    the modeled ranking, exactly like the GEMM `auto_tune`'s measure hook;
+    legality filtering stays model-side either way.
     """
     cands = sorted({c for c in _BS_CANDIDATES if c <= s and s % c == 0} | {s})
     best: Optional[DecodeAttnCandidate] = None
@@ -183,7 +187,8 @@ def best_decode_attn_block(batch: int, kvh: int, group: int, s: int,
                                valid_len=ln) for ln in lens]
         if rs[0]["vmem"] > VMEM_BYTES // 4:
             continue
-        t = sum(r["t_us"] for r in rs) / len(rs)
+        t = measure(bs) if measure is not None \
+            else sum(r["t_us"] for r in rs) / len(rs)
         # lens is sorted with s last: rs[-1] is the full-length cost
         cand = DecodeAttnCandidate(bs, t, rs[-1]["cache_bytes"],
                                    rs[0]["vmem"])
@@ -194,6 +199,28 @@ def best_decode_attn_block(batch: int, kvh: int, group: int, s: int,
             f"no feasible decode-attn block for (B={batch},KVH={kvh},"
             f"G={group},S={s},D={d})")
     return best
+
+
+_best_decode_attn_block_modeled = functools.lru_cache(maxsize=4096)(
+    _search_decode_attn_block)
+
+
+def best_decode_attn_block(
+    batch: int, kvh: int, group: int, s: int, d: int, *,
+    measure: Optional[Callable[[int], float]] = None,
+) -> DecodeAttnCandidate:
+    """block_s pick for one decode-attention shape class.
+
+    ``measure=None`` (the dispatch default, what `ops.decode_attention`
+    uses) ranks with the cache-bytes roofline and is cached per shape
+    class. On real TPU, pass ``measure`` (block_s -> wall-clock) to rank
+    candidates empirically — wall-clock autotune parity with the GEMM
+    `auto_tune`; measured searches are not cached (the callable's timings
+    are the caller's to memoize).
+    """
+    if measure is None:
+        return _best_decode_attn_block_modeled(batch, kvh, group, s, d)
+    return _search_decode_attn_block(batch, kvh, group, s, d, measure)
 
 
 @functools.lru_cache(maxsize=4096)

@@ -1,18 +1,29 @@
 """Batched quantized serving (the paper's deployment regime, Fig. 4b).
 
-`Server` owns a quantized model and a decode cache; `generate` batches
-variable-length prompts (left-padded... we right-pad and track lengths),
-prefills once, then decodes all sequences in lockstep — the standard static
-batcher. Production continuous batching would slot new requests into free
-cache rows between steps; the cache layout here (batch-major, pos-indexed)
-supports that, and `admit` shows the hook.
+`Server` owns a quantized model and exposes two decode paths over it:
 
-Decode is ONE jitted `lax.scan` over `lm.decode_step`
-(`lm.generate_tokens`): tokens accumulate on device and cross to the host
-exactly once per `generate` call, instead of a Python step loop with a
-per-token `int(...)` sync. Inside each step, every quantized linear runs
-the fused ReQuant+GEMM kernel (`kernels/abq_fused.py`) with
-decode-autotuned tiles — the serving hot path of the whole repo.
+* **static batcher** (``generate(..., engine=False)``, the default and the
+  baseline `benchmarks/bench_serving.py` measures against): right-pad the
+  prompts, prefill once (per-row ``last_pos``: each row's first token comes
+  from its true prompt end, and per-row decode positions keep short rows
+  off the pad KV), then decode every sequence in lockstep as ONE jitted
+  `lax.scan` over `lm.decode_step` (`lm.generate_tokens`) — tokens
+  accumulate on device and cross to the host exactly once per call. A
+  finished row (``eos_id``) freezes in place but its slot keeps burning
+  decode steps until the longest row is done.
+
+* **continuous batching** (``engine=True``, the production path): the call
+  becomes a thin wrapper over `repro.serving.Engine` — submit every prompt,
+  drain the step loop. The engine admits requests into free cache rows
+  between device steps, retires rows on EOS/max-tokens with immediate slot
+  reuse, and decodes ragged per-row positions in one compiled step; see
+  `repro.serving.engine` for the slot/cache contract. Use `Server.engine`
+  directly for streaming / per-request sampling params / arrival-driven
+  workloads.
+
+Inside each decode step, every quantized linear runs the fused ReQuant+GEMM
+kernel (`kernels/abq_fused.py`) with decode-autotuned tiles — the serving
+hot path of the whole repo.
 
 CLI: PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke
 """
@@ -48,24 +59,82 @@ class Server:
                                    bit_balance=(w_bits <= 3))
         self.params = quantize_model(fp_params, self.cfg, self.qcfg)
         self.weight_mb = quantized_bytes(self.params) / 1e6
-        # n_steps and top_k are static (scan length / lax.top_k width); jit
+        # n_steps, top_k, top_p and eos are static (scan length / lax.top_k
+        # width / python-level filter & done-mask structure); jit
         # re-specializes per value. key=None (greedy) is a static pytree
         # structure, so greedy and sampling get separate specializations.
         self._generate = jax.jit(
-            lambda qp, c, t, n, key, temp, top_k: lm.generate_tokens(
-                qp, c, t, n, self.cfg, self.ctx, key=key,
-                temperature=temp, top_k=top_k),
-            static_argnums=(3, 6),
+            lambda qp, c, t, n, key, temp, top_k, top_p, eos: \
+                lm.generate_tokens(
+                    qp, c, t, n, self.cfg, self.ctx, key=key,
+                    temperature=temp, top_k=top_k, top_p=top_p, eos_id=eos),
+            static_argnums=(3, 6, 7, 8),
         )
+        # prefill jitted per (batch, prompt_len) shape — the eager path
+        # re-dispatched op by op on every call, dominating short-request
+        # serving; the engine's admit-prefill is jitted, so the static
+        # baseline must be too for policy comparisons to mean anything.
+        # Per-row ``last_pos`` picks each prompt's true last-token logits
+        # (short rows of a ragged batch used to sample their first token
+        # from the right-pad tail position)
+        self._prefill = jax.jit(
+            lambda qp, toks, last_pos: lm.prefill(
+                qp, toks, self.cfg, self.ctx,
+                max_len=self.max_len, last_pos=last_pos))
         self._sample_calls = 0
+        self._engine = None
+        self._engine_config = None
+
+    def engine(self, *, n_slots: int = 4, fresh: bool = False, **kw):
+        """The continuous-batching `repro.serving.Engine` over this
+        server's quantized params. Built lazily and reused across calls
+        while the requested configuration matches; a different
+        configuration (or ``fresh=True``) rebuilds — silently handing back
+        an engine with the wrong slot count/horizon would be worse than
+        the recompile."""
+        from repro.serving.engine import Engine
+
+        config = dict(kw, n_slots=n_slots)
+        if self._engine is None or fresh or config != self._engine_config:
+            self._engine = Engine(self.params, self.cfg, self.ctx,
+                                  max_len=self.max_len, **config)
+            self._engine_config = config
+        return self._engine
 
     def generate(self, prompts: list[list[int]], *, max_new_tokens: int = 32,
                  greedy: bool = True, temperature: float = 1.0,
-                 top_k: int = 0, seed: Optional[int] = None):
-        """Prefill + scan-decode. ``greedy=False`` temperature/top-k samples
-        (the PRNG key rides the scan carry — see `lm.generate_tokens`);
-        ``seed`` pins the stream, else each call advances an internal
-        counter. Output tokens make exactly ONE device→host transfer."""
+                 top_k: int = 0, top_p: float = 0.0,
+                 seed: Optional[int] = None, eos_id: Optional[int] = None,
+                 engine: bool = False):
+        """Prefill + scan-decode. ``greedy=False`` temperature/top-k/top-p
+        samples (the PRNG key rides the scan carry — see
+        `lm.generate_tokens`); ``seed`` pins the stream, else each call
+        advances an internal counter. ``eos_id`` freezes finished rows in
+        the jitted step and trims outputs after the stop token. Output
+        tokens make exactly ONE device→host transfer.
+
+        ``engine=True`` routes the call through the continuous-batching
+        engine instead (submit-all + drain): greedy token outputs are
+        bitwise identical to the static path (sampled streams differ —
+        per-request fold_in keys vs the static scan's shared key), but
+        finished rows are retired and their slots reused instead of
+        burning lockstep steps — and one host sync per step rather than
+        per call. The stats dict differs: engine scheduling stats
+        (steps/occupancy) replace the static path's prefill/decode split;
+        weight_mb/qtag are carried over.
+        """
+        if engine:
+            # reuse whatever engine the caller configured (never silently
+            # rebuild over queued work); default to an 8-slot one otherwise
+            eng = self._engine if self._engine is not None \
+                else self.engine(n_slots=8)
+            outs, stats = eng.generate(
+                prompts, max_new_tokens=max_new_tokens, greedy=greedy,
+                temperature=temperature, top_k=top_k, top_p=top_p,
+                seed=seed, eos_id=eos_id)
+            stats["weight_mb"] = self.weight_mb
+            stats["qtag"] = self.qcfg.tag()
+            return outs, stats
         cfg, ctx = self.cfg, self.ctx
         b = len(prompts)
         plen = max(len(q) for q in prompts)
@@ -73,10 +142,15 @@ class Server:
         for i, q in enumerate(prompts):
             toks[i, : len(q)] = q  # right-padded; mask via per-seq length
         tokens = jnp.asarray(toks)
+        lengths = np.asarray([len(q) for q in prompts], np.int32)
 
         t0 = time.time()
-        logits, cache = lm.prefill(self.params, tokens, cfg, ctx,
-                                   max_len=self.max_len)
+        logits, cache = self._prefill(self.params, tokens, lengths - 1)
+        # ragged lockstep: each row decodes from ITS prompt end (per-row
+        # pos → per-row RoPE/KV-write/attention-length downstream), so a
+        # short row neither attends the pad KV nor conditions on it — the
+        # same contract as the engine path
+        cache["pos"] = jnp.asarray(lengths)
         jax.block_until_ready(logits)
         t_prefill = time.time() - t0
 
@@ -90,12 +164,12 @@ class Server:
             key = jax.random.PRNGKey(seed)
             key, sub = jax.random.split(key)
             first = lm.sample_logits(logits, sub, temperature=temperature,
-                                     top_k=top_k,
+                                     top_k=top_k, top_p=top_p,
                                      vocab_size=cfg.vocab_size)
         t0 = time.time()
         gen, cache = self._generate(self.params, cache, first, max_new_tokens,
                                     key, jnp.asarray(temperature, jnp.float32),
-                                    top_k)
+                                    top_k, float(top_p), eos_id)
         gen_np = np.asarray(gen)  # the one device→host transfer
         t_decode = time.time() - t0
 
@@ -104,6 +178,11 @@ class Server:
         if gen_np.ndim == 4:
             gen_np = gen_np[..., 0]
         outs = [gen_np[:, i, 0].tolist() for i in range(b)]
+        if eos_id is not None:
+            # frozen tail after the stop token (see lm.generate_tokens) is
+            # an artifact of the rectangular scan output — trim it
+            outs = [o[: o.index(eos_id) + 1] if eos_id in o else o
+                    for o in outs]
 
         stats = {
             "prefill_tok_s": b * plen / max(t_prefill, 1e-9),

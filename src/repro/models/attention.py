@@ -178,19 +178,37 @@ def attend_decode(
     """One-token step. x: (B, 1, D); layer_cache holds (B, KVH, S, D) int8
     values + (B, KVH, S) scales (attention-native layout).
 
+    ``pos`` is either a scalar (the legacy lockstep batcher: every row is at
+    the same position) or a (B,) vector (the continuous-batching engine:
+    each cache row advances independently — per-row RoPE positions, per-row
+    KV write indices, per-row valid lengths for the kernel's block skip).
+
     Returns (out, updated layer_cache). The new token's k/v are quantized and
     written at ``pos`` (dynamic index); attention masks positions > pos.
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    ragged = jnp.ndim(pos) == 1
+    if ragged:
+        positions = pos.astype(jnp.int32)[:, None]
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
     q, k, v = _project_qkv(
         params, x, cfg, positions, backend=backend, interpret=interpret,
         shard=shard,
     )
     kq, ks, vq, vs = quantize_kv_cached(k, v)  # (B,KVH,1,D) / (B,KVH,1)
 
-    def write(cache, val, axis):
-        return jax.lax.dynamic_update_slice_in_dim(cache, val, pos, axis=axis)
+    if ragged:
+        def write(cache, val, axis):
+            # per-row scatter: each batch row updates its own position
+            return jax.vmap(
+                lambda c, v_, p: jax.lax.dynamic_update_slice_in_dim(
+                    c, v_, p, axis=axis - 1)
+            )(cache, val, pos)
+    else:
+        def write(cache, val, axis):
+            return jax.lax.dynamic_update_slice_in_dim(cache, val, pos,
+                                                       axis=axis)
 
     new_cache = {
         "k": write(layer_cache["k"], kq, 2),
@@ -202,8 +220,13 @@ def attend_decode(
     }
     # length = pos + 1 is what makes the Pallas fast-path's S-block skip
     # reachable from the serving scan: early decode steps only stream the
-    # blocks covering the valid prefix, not the whole max_len cache
-    length = jnp.full((b,), pos + 1, jnp.int32)
+    # blocks covering the valid prefix, not the whole max_len cache. With a
+    # (B,) pos this is per-row — ragged batches are free in the kernel
+    # (scalar-prefetched lengths drive the block skip row by row).
+    if ragged:
+        length = (pos + 1).astype(jnp.int32)
+    else:
+        length = jnp.full((b,), pos + 1, jnp.int32)
     out = kops.decode_attention(
         q,
         new_cache["k"],
@@ -215,6 +238,79 @@ def attend_decode(
         interpret=interpret,
     )
     out = out.reshape(b, 1, cfg.n_heads * cfg.resolved_head_dim)
+    out = apply_linear(out, params["wo"], backend=backend, interpret=interpret)
+    return out, new_cache
+
+
+def attend_chunk(
+    params: dict,
+    x: Array,
+    layer_cache: dict,
+    start: Array,
+    cfg: ArchConfig,
+    *,
+    backend: str = "auto",
+    interpret: bool = False,
+    shard=None,
+):
+    """Chunked-prefill step: C prompt tokens against the quantized cache.
+
+    x: (B, C, D) — the chunk, at absolute positions ``start .. start+C-1``
+    (``start`` is a traced scalar; every row of the call is at the same
+    offset — the engine prefills one slot at a time, B == 1).
+
+    The chunk's K/V are quantized and written into the cache first, then the
+    chunk queries attend over the int8 cache with a causal-within-chunk mask
+    (col <= start + row). Unlike full prefill (which attends in bf16 and
+    quantizes after), the chunk attends over the already-quantized prefix —
+    that is the price of resuming a prefill mid-prompt; numerics match the
+    decode path, not the one-shot prefill path. XLA-lowered (C is small and
+    the op runs once per admitted chunk, off the decode hot loop). Note the
+    cost is O(S = max_len) per chunk — the whole cache row is dequantized
+    and masked, not just the valid prefix (``start`` is traced, so a
+    prefix-only slice would need bucketed specializations; deferred, see
+    ROADMAP).
+
+    Returns (out (B, C, D'), updated layer_cache).
+    """
+    b, c, _ = x.shape
+    hd = cfg.resolved_head_dim
+    positions = jnp.broadcast_to(start + jnp.arange(c, dtype=jnp.int32),
+                                 (b, c))
+    q, k, v = _project_qkv(
+        params, x, cfg, positions, backend=backend, interpret=interpret,
+        shard=shard,
+    )
+    kq, ks, vq, vs = quantize_kv_cached(k, v)  # (B,KVH,C,D) / (B,KVH,C)
+
+    def write(cache, val, axis):
+        return jax.lax.dynamic_update_slice_in_dim(cache, val, start,
+                                                   axis=axis)
+
+    new_cache = {
+        "k": write(layer_cache["k"], kq, 2),
+        "k_scale": write(layer_cache["k_scale"],
+                         ks.astype(layer_cache["k_scale"].dtype), 2),
+        "v": write(layer_cache["v"], vq, 2),
+        "v_scale": write(layer_cache["v_scale"],
+                         vs.astype(layer_cache["v_scale"].dtype), 2),
+    }
+    s_len = new_cache["k"].shape[2]
+    kvh = cfg.n_kv_heads
+    group = cfg.n_heads // kvh
+    qf = q.astype(jnp.float32).reshape(b, c, kvh, group, hd) * (hd**-0.5)
+    kf = (new_cache["k"].astype(jnp.float32)
+          * new_cache["k_scale"][..., None].astype(jnp.float32))
+    vf = (new_cache["v"].astype(jnp.float32)
+          * new_cache["v_scale"][..., None].astype(jnp.float32))
+    logits = jnp.einsum("bckgd,bksd->bckgs", qf, kf)
+    cols = jnp.arange(s_len)
+    rows = start + jnp.arange(c)
+    mask = cols[None, :] <= rows[:, None]  # (C, S) causal at offset
+    logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckgs,bksd->bckgd", probs, vf)
+    out = out.astype(x.dtype).reshape(b, c, cfg.n_heads * hd)
     out = apply_linear(out, params["wo"], backend=backend, interpret=interpret)
     return out, new_cache
 

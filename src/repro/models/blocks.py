@@ -273,6 +273,32 @@ def dense_block_decode(params: dict, x: Array, layer_cache: dict, pos: Array,
     return x, new_cache
 
 
+def dense_block_chunk(params: dict, x: Array, layer_cache: dict, start: Array,
+                      ctx: ModelContext):
+    """Chunked-prefill block step: C tokens against the quantized cache
+    (see `attention.attend_chunk`). Same residual structure as
+    `dense_block_decode`, multi-token."""
+    cfg = ctx.cfg
+    h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
+    a, new_cache = attn_mod.attend_chunk(
+        params["attn"], h, layer_cache, start, cfg, shard=ctx.shard, **ctx.kw
+    )
+    x = x + a
+    h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)
+    if "moe" in params:
+        m, _ = moe_mod.moe_ffn(
+            params["moe"], h, cfg,
+            mesh=ctx.mesh,
+            dp_axes=ctx.rules.batch if ctx.rules.batch else (),
+            tp_axis=ctx.rules.tensor if isinstance(ctx.rules.tensor, str) else "model",
+            **ctx.kw,
+        )
+    else:
+        m = glu_mlp(params["mlp"], h, cfg.act, shard=ctx.shard, **ctx.kw)
+    x = x + m
+    return x, new_cache
+
+
 def ssm_block_decode(params: dict, x: Array, layer_cache: dict,
                      ctx: ModelContext):
     cfg = ctx.cfg

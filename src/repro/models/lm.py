@@ -288,8 +288,17 @@ def _pad_cache(cache_kv: dict, max_len: int, seq_axis: int = 3) -> dict:
 
 
 def prefill(params, tokens, cfg: ArchConfig, ctx: ModelContext, *,
-            max_len: int, image_embeds: Optional[Array] = None):
-    """Run the prompt, build the decode cache. Returns (last_logits, cache)."""
+            max_len: int, image_embeds: Optional[Array] = None,
+            last_pos: Optional[Array] = None):
+    """Run the prompt, build the decode cache. Returns (last_logits, cache).
+
+    ``last_pos`` (traced scalar, or (B,) vector for per-row prompt lengths)
+    selects which position's logits to return; default is the final one.
+    The serving engine right-pads prompts to a bucket length (amortizing
+    jit compiles across prompt lengths) and passes the true last-token
+    index here — causality keeps the valid prefix's hidden states and KV
+    bitwise independent of the padded tail, so a bucketed prefill is exact.
+    """
     b, s = tokens.shape[0], tokens.shape[1]
     h = embed_tokens(params, tokens, cfg, ctx)
     cache: dict[str, Any] = {"pos": jnp.asarray(s, jnp.int32)}
@@ -316,7 +325,12 @@ def prefill(params, tokens, cfg: ArchConfig, ctx: ModelContext, *,
         raise ValueError(cfg.family)
 
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    h_last = h[:, -1:]
+    if last_pos is None:
+        h_last = h[:, -1:]
+    elif jnp.ndim(last_pos) == 0:
+        h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    else:
+        h_last = jnp.take_along_axis(h, last_pos[:, None, None], axis=1)
     if cfg.family == "audio":
         logits = jnp.stack(
             [logits_last_token(h_last, index_linear(params["heads"], cb), ctx.shard)
@@ -450,6 +464,12 @@ def _vlm_prefill(params, h, image_embeds, cfg, ctx, max_len):
 def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig,
                 ctx: ModelContext):
     """One token for every sequence. tokens: (B, 1) (audio: (B, 1, n_cb)).
+
+    ``cache["pos"]`` may be a scalar (lockstep: all rows at the same
+    position) or a (B,) vector (the continuous-batching engine: every cache
+    row — "slot" — decodes at its own position/length). The vector form is
+    what makes ragged batches free: RoPE, the KV write index, and the
+    decode-attention valid length are all per-row downstream of it.
 
     Returns (logits, new_cache). This is the function the decode_32k /
     long_500k dry-run cells lower — the ABQ regime.
@@ -604,31 +624,87 @@ def _vlm_decode(params, h, cache, pos, cfg, ctx, new_cache):
 # ---------------------------------------------------------------------------
 
 
+def _mask_padding_vocab(lf: Array, vocab_size: Optional[int]) -> Array:
+    if vocab_size is not None and vocab_size < lf.shape[-1]:
+        pad = jnp.arange(lf.shape[-1]) >= vocab_size
+        lf = jnp.where(pad, -1e30, lf)
+    return lf
+
+
+def _top_p_mask(lf: Array, p: Array) -> Array:
+    """Nucleus mask: keep the smallest set of tokens whose cumulative
+    probability reaches ``p`` (the token that crosses the threshold is
+    kept). Sorted-cumsum formulation: a sorted token survives iff the mass
+    strictly before it is < p; the smallest surviving logit becomes the
+    cutoff applied to the unsorted row. Composes with top-k by running on
+    already-top-k-masked logits (masked entries carry ~zero probability)."""
+    s_lf = jnp.sort(lf, axis=-1)[..., ::-1]
+    sp = jax.nn.softmax(s_lf, axis=-1)
+    csum = jnp.cumsum(sp, axis=-1)
+    pb = jnp.reshape(jnp.asarray(p, jnp.float32),
+                     jnp.shape(p) + (1,) * (lf.ndim - jnp.ndim(p)))
+    keep = (csum - sp) < pb
+    thresh = jnp.min(jnp.where(keep, s_lf, jnp.inf), axis=-1, keepdims=True)
+    # p <= 0 or >= 1 disables the filter for that row
+    thresh = jnp.where((pb > 0.0) & (pb < 1.0), thresh, -jnp.inf)
+    return jnp.where(lf < thresh, -1e30, lf)
+
+
 def sample_logits(logits: Array, key: Array, *, temperature: float = 1.0,
-                  top_k: int = 0,
+                  top_k: int = 0, top_p: float = 0.0,
                   vocab_size: Optional[int] = None) -> Array:
-    """Temperature / top-k sampling over the last axis. ``top_k <= 0``
-    samples the full distribution; ``top_k == 1`` is argmax (greedy).
+    """Temperature / top-k / top-p sampling over the last axis. ``top_k <=
+    0`` and ``top_p`` outside (0, 1) disable the respective filter;
+    ``top_k == 1`` is argmax (greedy). Filters compose: top-k narrows the
+    support first, then the nucleus mask runs on the filtered distribution.
 
     ``vocab_size`` masks the padding columns of a ``padded_vocab``-wide
     head: those logits come from untrained rows, and temperature sampling
     would otherwise give them real probability (greedy argmax rarely picks
     them, but sampled ids >= vocab_size have no detokenization)."""
-    lf = logits.astype(jnp.float32)
-    if vocab_size is not None and vocab_size < lf.shape[-1]:
-        pad = jnp.arange(lf.shape[-1]) >= vocab_size
-        lf = jnp.where(pad, -1e30, lf)
+    lf = _mask_padding_vocab(logits.astype(jnp.float32), vocab_size)
     lf = lf / jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
     if top_k and top_k > 0:
         kth = jax.lax.top_k(lf, min(top_k, lf.shape[-1]))[0][..., -1:]
         lf = jnp.where(lf < kth, -1e30, lf)
+    if top_p and 0.0 < top_p < 1.0:
+        lf = _top_p_mask(lf, jnp.asarray(top_p, jnp.float32))
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def sample_logits_ragged(logits: Array, keys: Array, *, temperature: Array,
+                         top_k: Array, top_p: Array,
+                         vocab_size: Optional[int] = None) -> Array:
+    """Per-row sampling for the continuous-batching engine: every sampling
+    parameter is a (B,) vector and every row draws from its own PRNG key, so
+    a request's token stream is a function of (its seed, its step index)
+    only — independent of which slot it occupies and who shares the batch.
+
+    logits: (B, 1, V); keys: (B, 2) uint32 per-row keys. ``top_k[i] <= 0``
+    / ``top_p[i]`` outside (0, 1) disable the filters for row i. top-k uses
+    a sorted-rank threshold (``lax.top_k`` needs a static width; the kth
+    value from a descending sort is the same threshold), then the nucleus
+    mask runs on the masked sorted row — identical composition semantics to
+    the scalar `sample_logits`."""
+    lf = _mask_padding_vocab(logits.astype(jnp.float32), vocab_size)
+    b, v = lf.shape[0], lf.shape[-1]
+    t = jnp.maximum(temperature.astype(jnp.float32), 1e-6).reshape(b, 1, 1)
+    lf = lf / t
+    k = jnp.clip(top_k.astype(jnp.int32), 0, v).reshape(b, 1, 1)
+    s_lf = jnp.sort(lf, axis=-1)[..., ::-1]
+    kth = jnp.take_along_axis(s_lf, jnp.clip(k - 1, 0, v - 1), axis=-1)
+    kth = jnp.where(k > 0, kth, -jnp.inf)
+    lf = jnp.where(lf < kth, -1e30, lf)
+    lf = _top_p_mask(lf, top_p.astype(jnp.float32))
+    draw = jax.vmap(lambda kk, ll: jax.random.categorical(kk, ll, axis=-1))
+    return draw(keys, lf).astype(jnp.int32)
 
 
 def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
                     cfg: ArchConfig, ctx: ModelContext, *,
                     key: Optional[Array] = None, temperature: float = 1.0,
-                    top_k: int = 0):
+                    top_k: int = 0, top_p: float = 0.0,
+                    eos_id: Optional[int] = None):
     """Decode ``n_steps`` tokens as ONE ``lax.scan`` over decode_step.
 
     ``first_tok`` is the token sampled from the prefill logits (shape (B, 1),
@@ -640,31 +716,135 @@ def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
 
     ``key=None`` decodes greedily (argmax). With a PRNG key, the key rides
     the scan carry (split once per step, all still on device) and each step
-    temperature/top-k samples via `sample_logits` — the sampling path costs
-    zero extra host syncs. ``temperature``/``top_k`` only apply when a key
-    is given.
+    temperature/top-k/top-p samples via `sample_logits` — the sampling path
+    costs zero extra host syncs. ``temperature``/``top_k``/``top_p`` only
+    apply when a key is given.
+
+    ``eos_id`` arms a per-row ``done`` mask in the scan carry: once a row
+    emits the stop token it is frozen — every later step re-emits the same
+    token and the sampled/argmax candidate is discarded, so the stacked
+    output stays rectangular while finished rows do no further "real"
+    decoding. The same freeze rule is what the continuous-batching engine's
+    per-row ``active`` mask applies (there the host also reclaims the slot).
 
     Returns (toks, final_cache) with toks (n_steps, B, 1[, n_cb]) int32.
     """
     greedy = key is None
+    if eos_id is not None and cfg.family == "audio":
+        raise ValueError("eos_id is per-token-id; audio emits one token per "
+                         "codebook per step — no single stop id applies")
 
     def body(carry, _):
-        tok, c, k = carry
+        tok, c, k, done = carry
         logits, c = decode_step(params, c, tok, cfg, ctx)
         if greedy:
             nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         else:
             k, sub = jax.random.split(k)
             nxt = sample_logits(logits, sub, temperature=temperature,
-                                top_k=top_k, vocab_size=cfg.vocab_size)
-        return (nxt, c, k), tok
+                                top_k=top_k, top_p=top_p,
+                                vocab_size=cfg.vocab_size)
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+            nxt = jnp.where(done[:, None], tok, nxt)
+        return (nxt, c, k, done), tok
 
     k0 = jax.random.PRNGKey(0) if greedy else key
-    (_, cache, _), toks = jax.lax.scan(
-        body, (first_tok.astype(jnp.int32), cache, k0), None, length=n_steps,
-        unroll=ctx.unroll,
+    done0 = jnp.zeros((first_tok.shape[0],), bool)
+    (_, cache, _, _), toks = jax.lax.scan(
+        body, (first_tok.astype(jnp.int32), cache, k0, done0), None,
+        length=n_steps, unroll=ctx.unroll,
     )
     return toks, cache
+
+
+def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
+                       active: Array, sampling: dict, base_key: Array,
+                       cfg: ArchConfig, ctx: ModelContext, *,
+                       sample: bool = True):
+    """One continuous-batching engine step: every slot decodes at its own
+    position with its own sampling parameters; one compiled function serves
+    any slot occupancy.
+
+    tok: (B, 1) current token per slot; pos: (B,) per-row write position
+    (= valid length); active: (B,) bool — inactive rows (free slots,
+    retired or still-prefilling requests) freeze: their token and position
+    are passed through unchanged and the sampled candidate is discarded
+    (their KV write lands at the frozen ``pos`` and is overwritten on
+    re-admission or the next real step — never attended, since per-row
+    ``length`` masks it).
+
+    ``sampling`` holds (B,) vectors: greedy (bool), temperature (f32),
+    top_k (i32), top_p (f32), seed (i32), step (i32). Each row's PRNG key
+    is ``fold_in(fold_in(base_key, seed), step)`` — a pure function of the
+    request's seed and its sample index, so a request's stream is bitwise
+    independent of slot assignment and batch composition.
+
+    ``sample=False`` is the all-greedy static specialization: when the host
+    knows no occupied slot samples, the sort/cumsum/PRNG machinery is
+    compiled out entirely (greedy rows' tokens are identical either way —
+    argmax ignores the sampler — so flipping the flag never changes a
+    greedy row's stream).
+
+    Returns (next_tok (B, 1), new_cache) — ``new_cache`` has no "pos" (the
+    engine owns positions host-side and passes them in each step).
+    """
+    if cfg.family in ("vlm", "audio"):
+        raise NotImplementedError(
+            f"continuous batching not implemented for family {cfg.family!r}")
+    c = dict(cache)
+    c["pos"] = pos.astype(jnp.int32)
+    logits, new_cache = decode_step(params, c, tok, cfg, ctx)
+    greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    if sample:
+        fold = lambda s, t: jax.random.fold_in(
+            jax.random.fold_in(base_key, s), t)
+        keys = jax.vmap(fold)(sampling["seed"], sampling["step"])
+        sampled = sample_logits_ragged(
+            logits, keys, temperature=sampling["temperature"],
+            top_k=sampling["top_k"], top_p=sampling["top_p"],
+            vocab_size=cfg.vocab_size)
+        nxt = jnp.where(sampling["greedy"][:, None], greedy_tok, sampled)
+    else:
+        nxt = greedy_tok
+    nxt = jnp.where(active[:, None], nxt, tok)
+    new_cache["pos"] = jnp.where(active, pos + 1, pos)
+    return nxt, new_cache
+
+
+def prefill_chunk(params, attn_cache: dict, tokens: Array, start: Array,
+                  cfg: ArchConfig, ctx: ModelContext, *,
+                  last_pos: Optional[Array] = None):
+    """Advance one slot's prefill by a chunk of C prompt tokens.
+
+    attn_cache: a single-row attention cache (leaves (L, 1, KVH, S, D) /
+    (L, 1, KVH, S)); tokens: (1, C) at absolute positions ``start ..
+    start+C-1``. Each layer writes the chunk's quantized KV and attends it
+    against the int8 prefix (see `attention.attend_chunk`). With
+    ``last_pos`` (chunk-local index of the prompt's final token) the
+    first-token logits are returned; mid-prompt chunks pass None and get
+    logits=None. dense/moe families only — SSM state carries can't resume
+    from a written cache row.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"chunked prefill not implemented for family {cfg.family!r}")
+    h = embed_tokens(params, tokens, cfg, ctx)
+
+    def body(carry, xs):
+        x = carry
+        lp, lc = xs
+        x, nc = B.dense_block_chunk(lp, x, lc, start, ctx)
+        return x, nc
+
+    h, updated = jax.lax.scan(body, h, (params["blocks"], attn_cache),
+                              unroll=ctx.unroll)
+    if last_pos is None:
+        return None, updated
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    h_last = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    logits = logits_last_token(h_last, lm_head_weight(params, cfg), ctx.shard)
+    return logits, updated
 
 
 # ---------------------------------------------------------------------------

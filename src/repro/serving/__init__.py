@@ -1,0 +1,12 @@
+"""Continuous-batching serving engine over the quantized decode fast-path.
+
+`engine.Engine` owns the slot pool (fixed cache rows) and the step loop;
+`scheduler.Scheduler` decides who gets a free slot when; `request.Request`
+carries per-request sampling parameters and the streamed token buffer.
+"""
+
+from repro.serving.engine import Engine
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.scheduler import Scheduler
+
+__all__ = ["Engine", "Request", "RequestState", "SamplingParams", "Scheduler"]

@@ -1,0 +1,521 @@
+"""Continuous-batching engine over the quantized decode fast-path.
+
+The slot/cache contract
+-----------------------
+
+The engine owns a fixed pool of ``n_slots`` cache rows — the batch axis of
+the decode cache (`lm.init_cache` layout: attention leaves are
+``(L, B, KVH, max_len, D)``, batch-major and pos-indexed). A **slot** is one
+row of that pool plus its entries in the per-row state vectors (position,
+active flag, sampling parameters). The contract:
+
+* A request owns its slot exclusively from admission to retirement; all of
+  its device state lives in that row (prefix KV at positions
+  ``0 .. pos-1``) and in the engine's ``(B, 1)`` current-token array.
+* Rows are independent: every decode-step op is batch-elementwise or
+  batch-contracted (quantized GEMMs are integer-exact per row, attention /
+  norms reduce within a row), so a request's tokens are bitwise identical
+  whatever the other slots hold. That is what the sequential-oracle test
+  pins, and why admission never needs to quiesce the batch.
+* ``pos`` is per-row; per-row ``length = pos + 1`` drives the
+  decode-attention kernel's S-block skip, so a freshly admitted short
+  request does not pay for a long neighbor's prefix (ragged batches are
+  free in the kernel).
+* Free/retired/prefilling rows still flow through the compiled step (one
+  specialization serves every occupancy) but are frozen: ``active=False``
+  passes their token and position through, and their (discarded) KV write
+  lands at the frozen position — never attended, overwritten on reuse
+  (a chunk-prefilling row's ``pos`` is pinned to its prefill frontier so
+  the garbage write always falls in the next chunk's span, which the next
+  chunk overwrites before anything can attend it).
+* Retirement frees the slot in the same host step that observed the
+  finishing token; admission runs before the next device call, so a slot
+  never idles while work is queued.
+
+The step loop makes exactly ONE device→host transfer per step — the
+``(H, B, 1)`` stacked-token result of that step's device call
+(``H = step_horizon``). Everything else stays on device: admission prefill,
+the decode scan, sampling, and the per-row state vectors themselves (the
+device copies are refreshed from the host mirrors only when a slot event
+changes them; ``pos``/``step`` advance on device inside the call and the
+mirrors replay the update host-side, so a steady-state step uploads
+nothing).
+
+``step_horizon`` trades scheduling granularity for dispatch amortization
+(multi-step scheduling): each engine step decodes H tokens per row in one
+jitted ``lax.scan`` before the host looks again. Retirement then happens at
+block granularity — a row that finishes mid-block wastes at most H-1 slot
+steps — and a request's *emitted* tokens are bitwise independent of H (the
+per-row PRNG is indexed by sample count, not by engine step). H=1 is exact
+streaming; throughput-oriented serving wants H≈4-8.
+
+Prefill on admission runs right-padded to ``prefill_bucket`` to bound jit
+specializations; the true per-row last-token index picks the first-token
+logits (exact under causality). Same-bucket admissions landing on the same
+step are batched into ONE compiled prefill+install call. With
+``prefill_chunk`` set, prompts longer than one chunk are fed one chunk per
+engine step (`lm.prefill_chunk`), so a long prompt never stalls running
+decodes for more than a chunk's worth of work; chunked rows attend over
+their own already-quantized prefix — decode numerics, not one-shot-prefill
+numerics.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from repro.serving.request import (
+    FINISHED,
+    PREFILLING,
+    RUNNING,
+    Request,
+    RequestState,
+    SamplingParams,
+)
+from repro.serving.scheduler import Scheduler
+
+_ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+# families whose prefill is order-sensitive end to end (recurrent state):
+# bucket padding would corrupt the final state, so prompts prefill unpadded
+_EXACT_LEN_FAMILIES = ("ssm", "hybrid")
+
+
+class Engine:
+    def __init__(self, params, cfg: ArchConfig, ctx: ModelContext, *,
+                 n_slots: int = 4, max_len: int = 256,
+                 scheduler: Optional[Scheduler] = None,
+                 prefill_bucket: int = 16,
+                 prefill_chunk: Optional[int] = None,
+                 step_horizon: int = 1,
+                 base_seed: int = 0):
+        if cfg.family not in _ENGINE_FAMILIES:
+            raise NotImplementedError(
+                f"continuous batching supports {_ENGINE_FAMILIES}, "
+                f"got {cfg.family!r}")
+        if prefill_chunk is not None and cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                "chunked prefill needs a pos-indexed KV cache "
+                f"(dense/moe), got {cfg.family!r}")
+        if step_horizon < 1:
+            raise ValueError(f"step_horizon must be >= 1, got {step_horizon}")
+        self.params, self.cfg, self.ctx = params, cfg, ctx
+        self.n_slots, self.max_len = n_slots, max_len
+        # not `scheduler or ...`: an empty Scheduler is len()==0-falsy
+        self.scheduler = scheduler if scheduler is not None else Scheduler()
+        self.prefill_bucket = max(1, prefill_bucket)
+        self.prefill_chunk = prefill_chunk
+        self.step_horizon = step_horizon
+        self._base_key = jax.random.PRNGKey(base_seed)
+
+        cache = lm.init_cache(cfg, n_slots, max_len)
+        cache.pop("pos")  # positions are per-row, threaded per step
+        self.cache = cache
+        self._tok = jnp.zeros((n_slots, 1), jnp.int32)
+        # host mirrors of the per-row state (python bookkeeping reads
+        # these); the device copies in self._dev are the step inputs
+        self._pos = np.zeros(n_slots, np.int32)
+        self._active = np.zeros(n_slots, bool)
+        self._greedy = np.ones(n_slots, bool)
+        self._temp = np.ones(n_slots, np.float32)
+        self._top_k = np.zeros(n_slots, np.int32)
+        self._top_p = np.zeros(n_slots, np.float32)
+        self._seed = np.zeros(n_slots, np.int32)
+        self._n_sampled = np.zeros(n_slots, np.int32)
+        self._dev: dict[str, jax.Array] = {}
+        self._push_rows()
+        self._dirty = False
+        self._slots: list[Optional[RequestState]] = [None] * n_slots
+
+        self._pending: Optional[np.ndarray] = None
+        self._pending_slots: list[tuple[int, RequestState]] = []
+        self._next_id = 0
+        self._auto_seed = 0
+        self.stats = {"steps": 0, "device_steps": 0, "transfers": 0,
+                      "occupancy_sum": 0.0, "tokens_out": 0,
+                      "admitted": 0, "finished": 0, "prefill_chunks": 0,
+                      "horizon": step_horizon}
+
+        # params are engine-constant: captured in the jit closures so the
+        # (large) param tree is never flattened/hashed per call; `sample`
+        # is a static flag — the all-greedy specialization compiles the
+        # sampler out of the hot loop (greedy tokens are flag-invariant)
+        self._step_fn = jax.jit(self._raw_step, static_argnums=(10,))
+        self._admit_fns: dict[tuple[int, int, bool], callable] = {}
+        self._chunk_mid_fn = None
+        self._chunk_last_fn = None
+
+    def _push_rows(self) -> None:
+        """Refresh the device copies of the per-row vectors from the host
+        mirrors — called only when a slot event (admit/retire) changed
+        them; between events, pos/step advance on device inside the step
+        and the mirrors replay the same update host-side."""
+        self._dev = {
+            "pos": jnp.asarray(self._pos),
+            "step": jnp.asarray(self._n_sampled),
+            "active": jnp.asarray(self._active),
+            "greedy": jnp.asarray(self._greedy),
+            "temp": jnp.asarray(self._temp),
+            "top_k": jnp.asarray(self._top_k),
+            "top_p": jnp.asarray(self._top_p),
+            "seed": jnp.asarray(self._seed),
+        }
+
+    # ------------------------------------------------------------------
+    # jitted device functions
+    # ------------------------------------------------------------------
+
+    def _raw_step(self, cache, tok, pos, step, active, greedy, temp,
+                  top_k, top_p, seed, sample):
+        """H = step_horizon ragged decode steps as one lax.scan; emits the
+        H consumed tokens (the stream the host appends) and the advanced
+        carry. Inactive rows freeze inside ragged_decode_step."""
+        base = {"greedy": greedy, "temperature": temp, "top_k": top_k,
+                "top_p": top_p, "seed": seed}
+
+        def body(carry, _):
+            tok, pos, step, cache = carry
+            nxt, nc = lm.ragged_decode_step(
+                self.params, cache, tok, pos, active,
+                dict(base, step=step), self._base_key, self.cfg, self.ctx,
+                sample=sample)
+            new_pos = nc.pop("pos")
+            new_step = step + active.astype(jnp.int32)
+            return (nxt, new_pos, new_step, nc), tok
+
+        (tok, pos, step, cache), emitted = jax.lax.scan(
+            body, (tok, pos, step, cache), None, length=self.step_horizon)
+        return emitted, tok, pos, step, cache
+
+    def _insert_rows(self, pool: dict, rows: dict, slots) -> dict:
+        """Scatter a batch-k prefill cache into pool rows ``slots``
+        (axis 1). ``rows`` leaves are (L, k, ...); slots is (k,) int32."""
+        def one(p, r):
+            return p.at[:, slots].set(r.astype(p.dtype))
+
+        return {k: jax.tree.map(one, pool[k], rows[k]) for k in pool}
+
+    def _first_tokens(self, logits, seed, temp, top_k, top_p, greedy,
+                      sample: bool):
+        """Sample the k admitted requests' first tokens (sample index 0)."""
+        arg = jnp.argmax(logits, -1).astype(jnp.int32)
+        if not sample:
+            return arg
+        fold = lambda s: jax.random.fold_in(
+            jax.random.fold_in(self._base_key, s), jnp.int32(0))
+        keys = jax.vmap(fold)(seed)
+        sampled = lm.sample_logits_ragged(
+            logits, keys, temperature=temp, top_k=top_k, top_p=top_p,
+            vocab_size=self.cfg.vocab_size)
+        return jnp.where(greedy[:, None], arg, sampled)
+
+    def _admit_fn(self, padded_len: int, k: int, sample: bool):
+        """Batched prefill-and-install for k same-bucket admissions,
+        compiled once per (bucket length, k, sampling?)."""
+        if (padded_len, k, sample) not in self._admit_fns:
+            def f(cache, tok, toks, last_pos, slots, seed, temp, top_k,
+                  top_p, greedy):
+                logits, rows = lm.prefill(self.params, toks, self.cfg,
+                                          self.ctx, max_len=self.max_len,
+                                          last_pos=last_pos)
+                new_cache = self._insert_rows(cache, rows, slots)
+                first = self._first_tokens(logits, seed, temp, top_k, top_p,
+                                           greedy, sample)
+                tok = tok.at[slots].set(first)
+                return tok, new_cache
+
+            self._admit_fns[(padded_len, k, sample)] = jax.jit(f)
+        return self._admit_fns[(padded_len, k, sample)]
+
+    def _chunk_fns(self):
+        """(mid, last) chunk processors, compiled once per engine."""
+        if self._chunk_mid_fn is None:
+            def row_of(cache, slot):
+                return jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                    cache["attn"])
+
+            def insert(cache, row, slot):
+                def one(p, r):
+                    start = (0, slot) + (0,) * (p.ndim - 2)
+                    return jax.lax.dynamic_update_slice(
+                        p, r.astype(p.dtype), start)
+
+                return {"attn": jax.tree.map(one, cache["attn"], row)}
+
+            def mid(cache, toks, start, slot):
+                row = row_of(cache, slot)
+                _, row = lm.prefill_chunk(self.params, row, toks, start,
+                                          self.cfg, self.ctx)
+                return insert(cache, row, slot)
+
+            def last(cache, tok, toks, start, slot, last_pos, seed, temp,
+                     top_k, top_p, greedy):
+                row = row_of(cache, slot)
+                logits, row = lm.prefill_chunk(self.params, row, toks, start,
+                                               self.cfg, self.ctx,
+                                               last_pos=last_pos)
+                new_cache = insert(cache, row, slot)
+                first = self._first_tokens(
+                    logits, seed[None], temp[None], top_k[None], top_p[None],
+                    greedy[None], True)
+                tok = jax.lax.dynamic_update_slice(tok, first, (slot, 0))
+                return tok, new_cache
+
+            self._chunk_mid_fn = jax.jit(mid)
+            self._chunk_last_fn = jax.jit(last)
+        return self._chunk_mid_fn, self._chunk_last_fn
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Union[Request, Sequence[int]], **kw
+               ) -> RequestState:
+        """Queue a request. Accepts a `Request` or a raw prompt (token ids)
+        plus Request kwargs. Returns the live `RequestState` (its
+        ``tokens`` list streams while the engine runs)."""
+        if not isinstance(request, Request):
+            request = Request(prompt=tuple(request), **kw)
+        L = len(request.prompt)
+        if self.prefill_chunk is not None and L > self.prefill_chunk:
+            # chunked prefill pads the final chunk to a full chunk width
+            extent = -(-L // self.prefill_chunk) * self.prefill_chunk
+        else:
+            extent = self._padded_len(L)  # bucket-padded one-shot prefill
+        need = max(extent, L + request.max_new_tokens + self.step_horizon - 1)
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt ({L}, padded prefill extent {extent}) + "
+                f"max_new_tokens ({request.max_new_tokens}) + horizon "
+                f"headroom ({self.step_horizon - 1}) exceeds cache max_len "
+                f"({self.max_len})")
+        state = RequestState(request=request, request_id=self._next_id,
+                             arrival_t=time.time())
+        self._next_id += 1
+        self.scheduler.submit(state)
+        return state
+
+    # ------------------------------------------------------------------
+    # the step loop
+    # ------------------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(len(self.scheduler)) or any(
+            s is not None for s in self._slots)
+
+    def step(self) -> None:
+        """One engine step: emit+retire, admit, advance prefills, decode a
+        horizon block. Exactly one device→host transfer (the stacked-token
+        block) happens per step with any running row."""
+        self.stats["steps"] += 1
+
+        # 1) bookkeeping for the token block produced last step
+        if self._pending is not None:
+            now = time.time()
+            for slot, st in self._pending_slots:
+                for h in range(self._pending.shape[0]):
+                    st.tokens.append(int(self._pending[h, slot, 0]))
+                    st.token_times.append(now)
+                    self.stats["tokens_out"] += 1
+                    reason = self.scheduler.finish_reason(st)
+                    if reason is not None:
+                        self._retire(slot, st, reason)
+                        break
+            self._pending = None
+            self._pending_slots = []
+
+        # 2) admission into free slots (freed this step included);
+        # same-bucket admissions batch into one compiled call
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        if free:
+            admits = self.scheduler.pop_admissions(len(free),
+                                                   self.prefill_chunk)
+            batch: dict[int, list[tuple[RequestState, int]]] = {}
+            for st in admits:
+                slot = free.pop(0)
+                st.slot = slot
+                st.admit_t = time.time()
+                self._slots[slot] = st
+                self._set_row_params(slot, st)
+                self.stats["admitted"] += 1
+                if self.prefill_chunk is not None \
+                        and st.prompt_len > self.prefill_chunk:
+                    st.status = PREFILLING
+                    st.prefill_pos = 0
+                else:
+                    batch.setdefault(self._padded_len(st.prompt_len),
+                                     []).append((st, slot))
+            for padded, group in batch.items():
+                self._admit_group(
+                    padded, group,
+                    any(not st.request.sampling.greedy for st, _ in group))
+
+        # 3) chunked-prefill rows advance one chunk
+        for slot, st in enumerate(self._slots):
+            if st is not None and st.status == PREFILLING:
+                self._advance_prefill(slot, st)
+
+        # 4) device step (one jitted call decoding `step_horizon` tokens),
+        # then the block's ONE device→host transfer
+        running = [(i, s) for i, s in enumerate(self._slots)
+                   if s is not None and s.status == RUNNING]
+        if running:
+            if self._dirty:
+                self._push_rows()
+                self._dirty = False
+            self.stats["occupancy_sum"] += len(running) / self.n_slots
+            self.stats["transfers"] += 1
+            self.stats["device_steps"] += 1
+            d = self._dev
+            sample = any(not s.request.sampling.greedy for _, s in running)
+            emitted, self._tok, d["pos"], d["step"], self.cache = \
+                self._step_fn(self.cache, self._tok, d["pos"], d["step"],
+                              d["active"], d["greedy"], d["temp"],
+                              d["top_k"], d["top_p"], d["seed"], sample)
+            self._pending = np.asarray(emitted)  # one device→host transfer
+            self._pending_slots = running
+            # replay the device update on the host mirrors (no transfer)
+            h = self.step_horizon
+            self._pos = np.where(self._active, self._pos + h, self._pos)
+            self._n_sampled = self._n_sampled + h * self._active
+
+    def run(self, max_steps: int = 1_000_000) -> None:
+        """Drain: step until queue and slots are empty."""
+        for _ in range(max_steps):
+            if not self.has_work():
+                return
+            self.step()
+        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    # ------------------------------------------------------------------
+    # admission / retirement internals
+    # ------------------------------------------------------------------
+
+    def _padded_len(self, L: int) -> int:
+        if self.cfg.family in _EXACT_LEN_FAMILIES:
+            return L  # recurrent prefill state is order-sensitive: no pad
+        b = self.prefill_bucket
+        return -(-L // b) * b
+
+    def _set_row_params(self, slot: int, st: RequestState) -> None:
+        sp = st.request.sampling
+        self._greedy[slot] = sp.greedy
+        self._temp[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._seed[slot] = sp.seed
+
+    def _admit_group(self, padded: int, group, sample: bool) -> None:
+        """One compiled prefill+install call for k same-bucket requests."""
+        k = len(group)
+        toks = np.zeros((k, padded), np.int32)
+        slots = np.zeros(k, np.int32)
+        last = np.zeros(k, np.int32)
+        for j, (st, slot) in enumerate(group):
+            toks[j, : st.prompt_len] = st.request.prompt
+            slots[j] = slot
+            last[j] = st.prompt_len - 1
+        fn = self._admit_fn(padded, k, sample)
+        self._tok, self.cache = fn(
+            self.cache, self._tok, jnp.asarray(toks), last, slots,
+            self._seed[slots], self._temp[slots], self._top_k[slots],
+            self._top_p[slots], self._greedy[slots])
+        for st, slot in group:
+            self._start_running(slot, st, st.prompt_len)
+
+    def _advance_prefill(self, slot: int, st: RequestState) -> None:
+        chunk = self.prefill_chunk
+        L = st.prompt_len
+        start = st.prefill_pos
+        end = min(start + chunk, L)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, : end - start] = st.request.prompt[start:end]
+        mid, last = self._chunk_fns()
+        self.stats["prefill_chunks"] += 1
+        if end < L:
+            self.cache = mid(self.cache, jnp.asarray(toks), np.int32(start),
+                             np.int32(slot))
+            st.prefill_pos = end
+            # track the prefill frontier: the row is frozen for decode, but
+            # the compiled step still executes its KV write — at `pos`. By
+            # keeping pos at the frontier, that garbage write lands in the
+            # NEXT chunk's span and is overwritten before it can ever be
+            # attended (a stale pos would let it land inside the prefix a
+            # previous chunk already wrote)
+            self._pos[slot] = end
+            self._dirty = True
+        else:
+            self._tok, self.cache = last(
+                self.cache, self._tok, jnp.asarray(toks), np.int32(start),
+                np.int32(slot), np.int32(L - 1 - start),
+                self._seed[slot], self._temp[slot], self._top_k[slot],
+                self._top_p[slot], self._greedy[slot])
+            st.prefill_pos = L
+            self._start_running(slot, st, L)
+
+    def _start_running(self, slot: int, st: RequestState, L: int) -> None:
+        st.status = RUNNING
+        self._pos[slot] = L
+        self._active[slot] = True
+        self._n_sampled[slot] = 1  # the first token was sampled at admit
+        self._dirty = True
+
+    def _retire(self, slot: int, st: RequestState, reason: str) -> None:
+        st.status = FINISHED
+        st.finish_reason = reason
+        st.finish_t = time.time()
+        st.slot = -1
+        self._slots[slot] = None
+        self._active[slot] = False
+        self._dirty = True
+        self.stats["finished"] += 1
+
+    # ------------------------------------------------------------------
+    # convenience driver
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 32, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0,
+                 top_p: float = 0.0, seed: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        """Submit-all + drain. Returns (outputs, stats) shaped like
+        `Server.generate`'s — the engine-backed equivalent of the static
+        batcher call, for drop-in use."""
+        if seed is None:
+            seed = self._auto_seed
+            self._auto_seed += len(prompts)
+        before = dict(self.stats)  # engines are reusable: report deltas
+        t0 = time.time()
+        states = [
+            self.submit(Request(
+                prompt=tuple(p), max_new_tokens=max_new_tokens,
+                eos_id=eos_id,
+                sampling=SamplingParams(greedy=greedy,
+                                        temperature=temperature,
+                                        top_k=top_k, top_p=top_p,
+                                        seed=seed + i)))
+            for i, p in enumerate(prompts)
+        ]
+        self.run()
+        dt = max(time.time() - t0, 1e-9)
+        outs = [st.output() for st in states]
+        n_out = sum(len(o) for o in outs)
+        dev = self.stats["device_steps"] - before["device_steps"]
+        stats = {
+            "decode_tok_s": n_out / dt,
+            "steps": self.stats["steps"] - before["steps"],
+            "device_steps": dev,
+            "transfers": self.stats["transfers"] - before["transfers"],
+            "mean_occupancy": ((self.stats["occupancy_sum"]
+                                - before["occupancy_sum"]) / max(dev, 1)),
+        }
+        return outs, stats

@@ -1,0 +1,84 @@
+"""Request / RequestState for the continuous-batching engine.
+
+A `Request` is what a client submits: prompt ids, a generation budget, a
+stop token, and per-request `SamplingParams` (greedy / temperature / top-k /
+top-p / seed). The engine wraps it in a `RequestState` — queue bookkeeping,
+the slot it occupies while running, the streamed token buffer, and
+arrival/admit/finish timestamps for latency accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode parameters; the engine packs these into the (B,)
+    vectors `lm.ragged_decode_step` consumes, so rows with different
+    settings share one compiled step."""
+
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0        # <= 0: full distribution
+    top_p: float = 0.0    # outside (0, 1): nucleus filter off
+    seed: int = 0         # per-request PRNG stream (greedy ignores it)
+
+    def validate(self) -> None:
+        if self.temperature <= 0:
+            raise ValueError(f"temperature must be > 0, got {self.temperature}")
+        if not 0.0 <= self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in [0, 1], got {self.top_p}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    prompt: tuple[int, ...]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    priority: int = 0  # lower admits first; FIFO among equals
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
+        if not self.prompt:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        self.sampling.validate()
+
+
+QUEUED, PREFILLING, RUNNING, FINISHED = \
+    "queued", "prefilling", "running", "finished"
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    request_id: int
+    arrival_t: float
+    status: str = QUEUED
+    slot: int = -1
+    prefill_pos: int = 0          # chunked prefill frontier
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    token_times: list[float] = dataclasses.field(default_factory=list)
+    admit_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    finish_reason: Optional[str] = None  # "eos" | "length"
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.status == FINISHED
+
+    def output(self, *, strip_eos: bool = False) -> list[int]:
+        toks = list(self.tokens)
+        if (strip_eos and self.finish_reason == "eos" and toks
+                and toks[-1] == self.request.eos_id):
+            toks = toks[:-1]
+        return toks

@@ -1,0 +1,73 @@
+"""Admission / retirement policy for the continuous-batching engine.
+
+The scheduler owns the waiting queue (a priority heap; FIFO among equal
+priorities) and two decisions:
+
+* **admission** — which queued requests get the free slots this step,
+  under a per-step prefill-token budget (``max_prefill_tokens``): prefill
+  work happens between decode steps, so unbounded admission of long
+  prompts would stall every running request. With chunked prefill the
+  budget counts one chunk per admitted request; without it, the whole
+  prompt. At least one request is always admitted when a slot is free —
+  a prompt larger than the whole budget can never be split smaller than
+  the policy allows, and deferring it forever would starve it.
+
+* **retirement** — whether a just-emitted token finishes its request
+  (stop token, or the max-new-tokens budget); the engine frees the slot
+  in the same step, so a queued request can be admitted into it before
+  the next device step ("immediate slot reuse").
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Optional
+
+from repro.serving.request import RequestState
+
+
+class Scheduler:
+    def __init__(self, *, max_prefill_tokens: Optional[int] = None):
+        self._heap: list[tuple[int, int, RequestState]] = []
+        self._seq = itertools.count()
+        self.max_prefill_tokens = max_prefill_tokens
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def submit(self, state: RequestState) -> None:
+        heapq.heappush(self._heap,
+                       (state.request.priority, next(self._seq), state))
+
+    def pop_admissions(self, n_free: int,
+                       chunk: Optional[int] = None) -> list[RequestState]:
+        """Pop up to ``n_free`` requests for this step's free slots.
+
+        ``chunk`` is the engine's prefill-chunk size (None: whole-prompt
+        prefill); the first prefill installment of each admitted request is
+        charged against ``max_prefill_tokens``."""
+        admitted: list[RequestState] = []
+        budget = self.max_prefill_tokens
+        spent = 0
+        while self._heap and len(admitted) < n_free:
+            _, _, state = self._heap[0]
+            cost = state.prompt_len if chunk is None \
+                else min(state.prompt_len, chunk)
+            if admitted and budget is not None and spent + cost > budget:
+                break  # later steps pick it up; never defer the first
+            heapq.heappop(self._heap)
+            spent += cost
+            admitted.append(state)
+        return admitted
+
+    @staticmethod
+    def finish_reason(state: RequestState) -> Optional[str]:
+        """Called right after a token lands in ``state.tokens``."""
+        req = state.request
+        if req.eos_id is not None and state.tokens \
+                and state.tokens[-1] == req.eos_id:
+            return "eos"
+        if len(state.tokens) >= req.max_new_tokens:
+            return "length"
+        return None
