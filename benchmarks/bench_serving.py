@@ -1,9 +1,15 @@
-"""Serving benchmark: continuous-batching engine vs the static batcher.
+"""Serving benchmark: continuous-batching engine vs the static batcher,
+plus paged-vs-slot KV allocation under a fixed cache budget.
 
 The engine's claim is system-level: the same kernels, the same per-step
 cost, but no idle-slot work — a retired row's slot is reused immediately
 instead of burning lockstep steps until the longest batchmate finishes.
-Two measurements, written to ``BENCH_serving.json`` so the serving
+Paged KV extends the claim to memory: under the SAME cache byte budget,
+block-granular allocation admits strictly more concurrent short requests
+than fixed max_len slot rows (a short request reserves its own worst-case
+blocks, not a whole row) — which is how ABQ's 2.7x KV compression turns
+into concurrency instead of stranded cache tail.
+Measurements, written to ``BENCH_serving.json`` so the serving
 trajectory is tracked PR over PR:
 
 1. **Modeled slot-step account** (deterministic, the CI gate): a
@@ -23,6 +29,18 @@ trajectory is tracked PR over PR:
    and mean slot occupancy. The engine pays a real host sync per step
    (the static scan pays one per call) and still must clear >= 1.5x.
 
+3. **Paged-vs-slot admission** (deterministic model + real-engine smoke):
+   the same byte budget is handed to both allocators (slot rows:
+   ``budget // max_len`` rows; paged: ``budget // block_size`` blocks)
+   and a short-request-heavy workload is admitted greedily. Gates: paged
+   peak concurrency **strictly greater** than slot rows (modeled account,
+   in `run.py --check`), the paged engine's observed ``peak_running``
+   strictly exceeding the slot engine's in the smoke (step-count-
+   deterministic, not wall-clock), and — off-TPU only — bitwise-equal
+   outputs (both engines run identical jnp attention math there; on TPU
+   the two paths pick different attention tile sizes, so equality is
+   numerical, not bitwise).
+
 Usage: PYTHONPATH=src python -m benchmarks.bench_serving [--no-smoke]
 """
 
@@ -39,6 +57,16 @@ N_REQ = 32
 SEED = 3
 MAX_LEN = 128
 HORIZON = 8  # engine multi-step horizon (tokens per jitted step)
+# paged-vs-slot scenario: same cache budget (SLOTS * MAX_LEN tokens) handed
+# to both allocators; the paged engine runs more rows and lets the block
+# pool, not the row count, bound admission. PAGED_BUCKET/PAGED_HORIZON are
+# shared by the deterministic admission model and the real smoke engines so
+# the two accountings cannot drift apart.
+KV_BLOCK = 16
+PAGED_SLOTS = 16
+N_SHORT = 24
+PAGED_BUCKET = 8
+PAGED_HORIZON = 1
 ARRIVAL_SCALE = 1.0  # mean inter-arrival, in decode steps (Poisson process)
 # CPU wall-clock slack for the smoke gate in run.py (containers are noisy;
 # the modeled slot-step account is the deterministic gate — same convention
@@ -113,6 +141,132 @@ def modeled_slot_steps(arrival, gens, slots: int = SLOTS,
         "engine_occupancy": occ_sum / max(calls, 1),
         "static_occupancy": static_occ,
     }
+
+
+# ---------------------------------------------------------------------------
+# 1b) paged-vs-slot admission under one cache budget
+# ---------------------------------------------------------------------------
+
+
+def make_short_workload(seed: int = SEED + 7, n: int = N_SHORT):
+    """The workload slot-rows are worst at: uniformly short requests
+    (8-token prompts, 4..8 generated tokens) against a max_len sized for
+    the occasional long one. Every request needs ~1 KV block but a slot
+    row reserves all MAX_LEN positions."""
+    rng = np.random.default_rng(seed)
+    plens = np.full(n, 8, int)
+    gens = rng.integers(4, 9, size=n).astype(int)
+    return plens, gens
+
+
+def modeled_paged_admission(plens, gens, *, budget_tokens: int = SLOTS * MAX_LEN,
+                            max_len: int = MAX_LEN, block: int = KV_BLOCK,
+                            bucket: int = PAGED_BUCKET,
+                            horizon: int = PAGED_HORIZON) -> dict:
+    """Peak admissible concurrency under one cache byte budget.
+
+    Slot rows: every request reserves a full ``max_len`` row —
+    concurrency = budget // max_len regardless of request size. Paged:
+    a request reserves ceil(need / block) blocks where ``need`` mirrors
+    the engine's worst-case accounting (block-rounded prefill extent vs
+    prompt + budget + horizon tail); greedy FIFO admission packs blocks
+    until the pool is dry. The deterministic CI gate: paged concurrency
+    must be STRICTLY greater on the short-request workload."""
+    def need(L, g):
+        extent = -(-int(L) // bucket) * bucket
+        extent = -(-extent // block) * block
+        return max(extent, int(L) + int(g) + horizon - 1)
+
+    needs = [need(L, g) for L, g in zip(plens, gens)]
+    slot_cap = budget_tokens // max_len
+    slot_peak = min(len(needs), slot_cap)
+    # tokens a slot row strands per admitted short request
+    stranded = [max_len - n_ for n_ in needs[:slot_peak]]
+
+    total_blocks = budget_tokens // block
+    used = 0
+    paged_peak = 0
+    for n_ in needs:
+        nb = -(-n_ // block)
+        if used + nb > total_blocks:
+            break
+        used += nb
+        paged_peak += 1
+    return {
+        "budget_tokens": budget_tokens,
+        "block_size": block,
+        "slot_peak_concurrency": slot_peak,
+        "paged_peak_concurrency": paged_peak,
+        "slot_stranded_tokens": int(sum(stranded)),
+        "paged_reserved_blocks": used,
+        "concurrency_gain": paged_peak / max(slot_peak, 1),
+    }
+
+
+def paged_smoke_run(print_fn=print) -> dict:
+    """Real engines, same quantized model, same cache byte budget: the
+    slot-row engine (SLOTS rows x MAX_LEN) vs the paged engine
+    (PAGED_SLOTS rows, pool = SLOTS * MAX_LEN tokens of KV_BLOCK-token
+    blocks). Everything gated here is step-count-deterministic (peak
+    concurrent running rows, device steps) — wall-clock is reported for
+    context only. Output equality is additionally gated off-TPU, where
+    both engines run the identical jnp attention math; on TPU the two
+    paths legitimately pick different attention tile sizes (contiguous
+    block_s vs page-divisor block_s), and a different online-softmax
+    partition is numerically — not bitwise — equivalent."""
+    import jax
+
+    from repro.launch.serve import Server
+
+    plens, gens = make_short_workload()
+    server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
+    rng = np.random.default_rng(SEED + 8)
+    prompts = [rng.integers(0, server.cfg.vocab_size, size=int(L)).tolist()
+               for L in plens]
+
+    def drain(engine):
+        from repro.serving import Request
+
+        t0 = time.time()
+        states = [engine.submit(Request(prompt=tuple(p),
+                                        max_new_tokens=int(g)))
+                  for p, g in zip(prompts, gens)]
+        engine.run()
+        wall = max(time.time() - t0, 1e-9)
+        outs = [st.output() for st in states]
+        return {
+            "peak_running": engine.stats["peak_running"],
+            "device_steps": engine.stats["device_steps"],
+            "tok_s": sum(len(o) for o in outs) / wall,
+        }, outs
+
+    slot_stats, slot_outs = drain(
+        server.engine(n_slots=SLOTS, fresh=True,
+                      prefill_bucket=PAGED_BUCKET,
+                      step_horizon=PAGED_HORIZON))
+    paged_eng = server.engine(
+        n_slots=PAGED_SLOTS, fresh=True, prefill_bucket=PAGED_BUCKET,
+        step_horizon=PAGED_HORIZON,
+        kv_block_size=KV_BLOCK, kv_pool_tokens=SLOTS * MAX_LEN)
+    paged_stats, paged_outs = drain(paged_eng)
+    match_required = jax.default_backend() != "tpu"
+    r = {
+        "slot": slot_stats,
+        "paged": paged_stats,
+        "pool": paged_eng.pool.stats(),
+        "outputs_match": slot_outs == paged_outs,
+        "outputs_match_required": match_required,
+        "concurrency_ok": paged_stats["peak_running"]
+        > slot_stats["peak_running"],
+    }
+    ok = r["concurrency_ok"] and (r["outputs_match"] or not match_required)
+    print_fn(f"serving_paged_smoke,slot_peak={slot_stats['peak_running']},"
+             f"paged_peak={paged_stats['peak_running']},"
+             f"slot_steps={slot_stats['device_steps']},"
+             f"paged_steps={paged_stats['device_steps']},"
+             f"outputs_match={r['outputs_match']},"
+             f"{'PASS' if ok else 'FAIL'}")
+    return r
 
 
 # ---------------------------------------------------------------------------
@@ -235,7 +389,25 @@ def run(print_fn=print, smoke: bool = True,
              f"(vs{m['static_occupancy']:.2f}),"
              f"{'PASS' if modeled_ok else 'FAIL'}")
 
+    # paged-vs-slot KV allocation under one cache budget (deterministic)
+    sp, sg = make_short_workload()
+    pm = modeled_paged_admission(sp, sg)
+    results["paged_modeled"] = pm
+    paged_ok = (pm["paged_peak_concurrency"]
+                > pm["slot_peak_concurrency"])
+    results["paged_concurrency_ok"] = paged_ok
+    print_fn(f"serving_paged_model,slot_peak={pm['slot_peak_concurrency']},"
+             f"paged_peak={pm['paged_peak_concurrency']},"
+             f"gain={pm['concurrency_gain']:.2f}x,"
+             f"stranded_slot_tokens={pm['slot_stranded_tokens']},"
+             f"{'PASS' if paged_ok else 'FAIL'}")
+
     if smoke:
+        ps = paged_smoke_run(print_fn)
+        results["paged_smoke"] = ps
+        results["paged_smoke_ok"] = (
+            ps["concurrency_ok"]
+            and (ps["outputs_match"] or not ps["outputs_match_required"]))
         s = smoke_run(print_fn)
         results["smoke"] = s
         # the headline claim, recorded in the artifact; the CI gate
@@ -259,7 +431,9 @@ def main(argv=None) -> int:
     p.add_argument("--out", default="BENCH_serving.json")
     args = p.parse_args(argv)
     r = run(smoke=not args.no_smoke, out_path=args.out)
-    ok = r["modeled_speedup_ok"] and r.get("smoke_speedup_ok", True)
+    ok = (r["modeled_speedup_ok"] and r["paged_concurrency_ok"]
+          and r.get("smoke_speedup_ok", True)
+          and r.get("paged_smoke_ok", True))
     return 0 if ok else 1
 
 

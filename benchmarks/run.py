@@ -51,10 +51,16 @@ def decode_byte_sections(smoke: bool, section=None) -> list[str]:
 
 
 def serving_section(smoke: bool, section=None) -> list[str]:
-    """Continuous-batching regression gate, shared by the full run and
+    """Continuous-batching regression gates, shared by the full run and
     --check: the engine must model >= 1.5x static-batcher throughput on
-    the Poisson workload (slot-step account; deterministic), and with
-    ``smoke`` must hit >= 1.5x wall-clock on the tiny model too.
+    the Poisson workload (slot-step account; deterministic), paged KV
+    allocation must admit strictly more concurrent short requests than
+    slot rows under the same cache budget (admission account;
+    deterministic), and with ``smoke`` the engine must hit >= 1.5x
+    wall-clock on the tiny model and the real paged engine must beat the
+    real slot engine's peak concurrency — with bitwise-matching outputs
+    off-TPU (on TPU the two paths pick different attention tile sizes,
+    so only the concurrency half gates; see bench_serving).
     Smoke-less runs write to scratch (tracked BENCH_serving.json keeps its
     smoke history)."""
     from benchmarks import bench_serving
@@ -73,10 +79,16 @@ def serving_section(smoke: bool, section=None) -> list[str]:
                           out_path=f"{bench_dir}BENCH_serving.json")
     if not r["modeled_speedup_ok"]:
         failures.append("serving_modeled_speedup")
+    if not r["paged_concurrency_ok"]:
+        failures.append("serving_paged_concurrency")
     # wall-clock gate is slacked (CPU noise) — the modeled gate above is
     # the deterministic one; the >= 1.5x smoke claim lives in the artifact
     if smoke and not r.get("smoke_not_regressed", True):
         failures.append("serving_smoke_regressed")
+    # the paged smoke gate is step-count-deterministic (peak concurrency,
+    # plus bitwise outputs off-TPU), so no wall-clock slack applies
+    if smoke and not r.get("paged_smoke_ok", True):
+        failures.append("serving_paged_smoke")
     return failures
 
 

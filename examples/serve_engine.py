@@ -1,6 +1,6 @@
 """Continuous-batching engine demo: ragged requests, streamed tokens.
 
-    PYTHONPATH=src python examples/serve_engine.py [--arch qwen3-4b]
+    PYTHONPATH=src python examples/serve_engine.py [--arch qwen3-4b] [--paged]
 
 Drives `repro.serving.Engine` directly (the production serving path):
 requests with different prompt lengths, generation budgets, stop tokens and
@@ -9,6 +9,11 @@ engine admits them into free cache slots between decode steps, retires rows
 on EOS/max-tokens, and reuses the slots immediately. Compare
 examples/serve_quantized.py — the static lockstep batcher over the same
 quantized model.
+
+``--paged`` switches the KV cache to block-granular paged allocation
+(`repro.serving.BlockPool`): admission is then bounded by free 16-token
+blocks rather than free max_len rows, and the final report prints the
+pool accounting next to the slot stats.
 """
 
 import argparse
@@ -28,11 +33,15 @@ def main():
     p.add_argument("--requests", type=int, default=6)
     p.add_argument("--slots", type=int, default=2)
     p.add_argument("--w-bits", type=int, default=2)
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV: 16-token blocks, pool sized to the "
+                        "slot-row byte budget")
     args = p.parse_args()
 
     server = Server(arch=args.arch, smoke=True, w_bits=args.w_bits,
                     max_len=128)
-    engine = server.engine(n_slots=args.slots, prefill_bucket=8)
+    paged_kw = {"kv_block_size": 16} if args.paged else {}
+    engine = server.engine(n_slots=args.slots, prefill_bucket=8, **paged_kw)
     rng = np.random.default_rng(0)
 
     states = []
@@ -63,6 +72,8 @@ def main():
     print(f"device steps: {engine.stats['device_steps']} | "
           f"mean occupancy: {occ:.2f} | "
           f"host transfers: {engine.stats['transfers']}")
+    if engine.pool is not None:
+        print(f"paged pool: {engine.pool.stats()}")
 
 
 if __name__ == "__main__":

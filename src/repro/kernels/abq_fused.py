@@ -27,6 +27,31 @@ per-group (g128) weights.
 to HBM so tests can assert bitwise identity with the unfused path — never
 used in the serving path (it would re-create the traffic the fusion
 deletes).
+
+Contracts
+---------
+
+* **Grid layout**: ``(M/BM, N/BN)``, both axes "parallel" — every
+  (M-tile, N-tile) program is independent because each one re-runs the
+  ReQuant prologue on its own x tile (no cross-tile state). That
+  redundancy is the current cost of parallelism; hoisting (q, scale) into
+  VMEM scratch under ``pl.when(j == 0)`` would require "arbitrary"
+  semantics on the N axis (ROADMAP: prologue hoisting).
+* **Scratch usage**: none — the int8 container ``q``, its scales, and the
+  int32 accumulator live as kernel-local values (VMEM-backed registers),
+  sized by the BlockSpec tiles: ``(BM, K)`` activation tile, P×
+  ``(K/32, BN)`` packed plane tiles, ``(BM, BN)`` accumulator. `fits_vmem`
+  is the dispatcher's admission check: a full-K fused tile that would
+  bust the VMEM budget falls back to the unfused two-kernel path.
+* **Scalar-prefetch**: none needed — all tile addressing is affine in the
+  grid indices (contrast `decode_attn.py`, where valid lengths and block
+  tables must be prefetched for the index maps).
+* **The one-transfer-per-step invariant** (serving): this kernel is why
+  the engine's decode step makes no intermediate HBM round-trips on the
+  linear path — activations stream in bf16, quantize in the prologue, and
+  contract from VMEM; combined with the scan-accumulated token block
+  (`serving/engine.py`), a whole engine step touches the host exactly
+  once, for the stacked tokens.
 """
 
 from __future__ import annotations

@@ -33,6 +33,43 @@ an empty prefix). The jnp paths degenerate to a uniform average over the
 whole cache there (softmax of an all ``-1e30`` row); decode never hits this
 (the current token is always written before attending), but the kernel's
 convention is the defensible one and is pinned by a test.
+
+Contracts (shared by the contiguous and paged entry points)
+-----------------------------------------------------------
+
+* **Grid layout**: ``(B·KVH, S/block_s)`` — axis 0 is "parallel" (every
+  (batch, kv-head) row is independent), axis 1 is "arbitrary" (the S sweep
+  carries the online-softmax state, so it must run in order on one core).
+* **Scratch usage** (all VMEM, live across the S sweep of one grid row,
+  re-initialized under ``pl.when(si == 0)``): ``m (G,1) f32`` running max,
+  ``l (G,1) f32`` running sum, ``acc (G,D) f32`` running output, and the
+  per-row re-quantized query ``qi (G,D) int8`` / ``qs (G,1) f32`` —
+  computed once per row and reused for every S-block (q is S-invariant).
+* **Scalar-prefetch contract**: index maps run ahead of the kernel body on
+  the scalar core, so everything they read must be prefetched.
+  ``len_ref (B·KVH,) int32`` drives the block skip: the kv index maps
+  clamp the S-block index to the last valid block (consecutive identical
+  indices → the pipeline issues no new DMA) and ``pl.when`` guards the
+  body. The paged entry point prefetches a second operand,
+  ``bt_ref (B·max_blocks,) int32`` — the flattened per-row block tables —
+  and resolves ``(row, s_block)`` to a *physical* pool block inside the
+  index map, so the flash-decode loop streams only mapped blocks and the
+  scattered pool never needs to be gathered into a contiguous copy.
+
+Paged mode (`decode_attention_paged_pallas`)
+--------------------------------------------
+
+The serving engine's paged allocator (`repro.serving.paged.BlockPool`)
+stores the cache as a pool of ``page``-token physical blocks with per-slot
+block tables instead of contiguous ``max_len`` rows. The kernel body is
+**identical** — same math, same scratch, same skip — only the kv/scale
+index maps change: logical S-block ``si`` maps to
+``bt[row, si // per] * KVH + head`` (``per = page // block_s``), i.e. the
+indirection is folded into the DMA descriptor generation on the scalar
+core at zero cost to the compute loop. The length clamp becomes a
+block-table length: S-blocks past the valid prefix clamp to the last
+mapped block, so unmapped (TRASH) tail entries are neither fetched nor
+computed.
 """
 
 from __future__ import annotations
@@ -221,4 +258,123 @@ def decode_attention_pallas(
         ),
         interpret=interpret,
     )(lens, qt, kt, kst, vt, vst)
+    return out.reshape(b, kvh, group, d).reshape(b, 1, h, d)
+
+
+def _paged_decode_attn_kernel(len_ref, bt_ref, *refs, block_s, s_steps):
+    """The contiguous kernel body verbatim: the block table is consumed
+    entirely by the index maps (DMA descriptor generation on the scalar
+    core); the compute loop never sees the indirection."""
+    del bt_ref
+    _decode_attn_kernel(len_ref, *refs, block_s=block_s, s_steps=s_steps)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret"),
+)
+def decode_attention_paged_pallas(
+    q: Array,
+    k_pool: Array,
+    v_pool: Array,
+    k_scale: Array,
+    v_scale: Array,
+    block_tables: Array,
+    *,
+    scale: float,
+    length: Array,
+    block_s: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """Single-token attention over the *paged* int8 pool, one HBM pass.
+
+    q:            (B, 1, H, D) float
+    k_pool:       (N_phys, KVH, page, D) int8 — the BlockPool device
+                  arrays (one layer's slice); row 0 is the TRASH block
+    k_scale:      (N_phys, KVH, page) f32 per-token dequant scales
+    block_tables: (B, max_blocks) int32 logical→physical block map
+    length:       (B,) int32 valid prefix length (<= mapped coverage)
+    block_s:      S-tile length; must divide ``page`` (default: ``page``)
+
+    Logical sequence length is ``max_blocks * page``; the kv index maps
+    resolve ``(block_table, s_block)`` via scalar prefetch so only mapped
+    blocks stream HBM→VMEM. Returns (B, 1, H, D) in q's dtype — bitwise
+    identical to `decode_attention_pallas` over the equivalent contiguous
+    cache **at the same block_s** (pinned by tests/test_paged_kv.py; a
+    different S-tile changes the online-softmax partition, which is
+    numerically — not bitwise — equivalent).
+    """
+    b, _, h, d = q.shape
+    n_phys, kvh, page = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    group = h // kvh
+    nb = block_tables.shape[1]
+    s_len = nb * page
+    if block_s is None:
+        block_s = page
+    if page % block_s:
+        raise ValueError(f"page={page} must tile by block_s={block_s}")
+    per = page // block_s
+    s_steps = s_len // block_s
+
+    qt = (q.astype(jnp.float32) * scale).reshape(b * kvh, group, d)
+    kt = k_pool.reshape(n_phys * kvh, page, d)
+    vt = v_pool.reshape(n_phys * kvh, page, d)
+    kst = k_scale.astype(jnp.float32).reshape(n_phys * kvh, page)
+    vst = v_scale.astype(jnp.float32).reshape(n_phys * kvh, page)
+    lens = jnp.repeat(length.astype(jnp.int32), kvh)
+    bt = block_tables.astype(jnp.int32).reshape(-1)  # (B * max_blocks,)
+
+    def _clamp(si, lb_ref, bh):
+        n_blocks = jax.lax.div(lb_ref[bh] + block_s - 1, block_s)
+        return jnp.minimum(si, jnp.maximum(n_blocks - 1, 0))
+
+    def _resolve(bh, si, lb_ref, bt_ref):
+        """(grid row, clamped s-block) -> (physical pool row, sub-block)."""
+        sc = _clamp(si, lb_ref, bh)
+        bi = jax.lax.div(bh, kvh)
+        hi = jax.lax.rem(bh, kvh)
+        phys = bt_ref[bi * nb + jax.lax.div(sc, per)]
+        return phys * kvh + hi, jax.lax.rem(sc, per)
+
+    def q_map(bh, si, lb_ref, bt_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, si, lb_ref, bt_ref):
+        row, j = _resolve(bh, si, lb_ref, bt_ref)
+        return (row, j, 0)
+
+    def sc_map(bh, si, lb_ref, bt_ref):
+        row, j = _resolve(bh, si, lb_ref, bt_ref)
+        return (row, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * kvh, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, group, d), q_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, d), jnp.int8),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_decode_attn_kernel, block_s=block_s, s_steps=s_steps,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, group, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lens, bt, qt, kt, kst, vt, vst)
     return out.reshape(b, kvh, group, d).reshape(b, 1, h, d)

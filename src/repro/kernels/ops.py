@@ -46,7 +46,10 @@ from repro.kernels import tuning
 from repro.kernels.abq_fused import abq_linear_fused_pallas, fits_vmem
 from repro.kernels.abq_matmul import abq_matmul_pallas
 from repro.kernels.act_quant import act_quant_pallas
-from repro.kernels.decode_attn import decode_attention_pallas
+from repro.kernels.decode_attn import (
+    decode_attention_paged_pallas,
+    decode_attention_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 
 Array = jax.Array
@@ -434,6 +437,7 @@ def decode_attention(
     *,
     scale: Optional[float] = None,
     length: Optional[Array] = None,
+    block_tables: Optional[Array] = None,
     fused_dequant: Optional[bool] = None,
     backend: str = "auto",
     interpret: bool = False,
@@ -446,6 +450,17 @@ def decode_attention(
               §Perf iteration 3 — no per-step transpose of the cache)
     k_scale:  [B, KVH, S] per-token-per-head dequant scales (if int8)
     length:   [B] valid prefix length (positions >= length are masked)
+
+    **Paged mode** (``block_tables`` given): the cache operands are the
+    serving engine's BlockPool arrays instead of contiguous rows —
+    k/v [N_phys, KVH, page, D], scales [N_phys, KVH, page] — and
+    ``block_tables`` [B, max_blocks] int32 maps each row's logical blocks
+    to physical pool blocks (logical S = max_blocks * page). ``length`` is
+    required (it is also the block-table valid length). The "pallas" mode
+    resolves the indirection inside the kernel's scalar-prefetched index
+    maps (`decode_attention_paged_pallas`) — only mapped blocks stream;
+    the jnp fallbacks gather the mapped blocks into a contiguous
+    [B, KVH, S, D] view first (XLA-lowered; same math, extra gather).
 
     Memory-bound op: the dominant bytes are the cache read.
 
@@ -489,10 +504,43 @@ def decode_attention(
             "per-token dequant scales are required to interpret the int8 "
             "container (pass the scales quantize_kv_cached produced)")
     b, _, h, d = q.shape
-    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
-    group = h // kvh
     if scale is None:
         scale = 1.0 / (d**0.5)
+
+    if block_tables is not None:
+        if length is None:
+            raise ValueError(
+                "decode_attention: paged mode (block_tables) requires "
+                "`length` — the block-table valid length drives both the "
+                "mask and the kernel's block skip")
+        page = k_cache.shape[2]
+        if mode == "pallas" and k_cache.dtype == jnp.int8 \
+                and (_resolve(backend) == "pallas" or interpret):
+            kvh = k_cache.shape[1]
+            s_log = block_tables.shape[1] * page
+            if block_s is None:
+                block_s = tuning.best_paged_decode_attn_block(
+                    b, kvh, h // kvh, s_log, d, page).block_s
+            return decode_attention_paged_pallas(
+                q, k_cache, v_cache, k_scale, v_scale, block_tables,
+                scale=scale, length=length, block_s=block_s,
+                interpret=interpret)
+        # jnp fallback: gather the mapped blocks into a contiguous view
+        # (B, max_blocks, KVH, page, ...) -> (B, KVH, max_blocks*page, ...)
+        def unpage(pool):
+            g = pool[block_tables]
+            if g.ndim == 5:
+                return g.transpose(0, 2, 1, 3, 4).reshape(
+                    g.shape[0], g.shape[2], -1, g.shape[4])
+            return g.transpose(0, 2, 1, 3).reshape(
+                g.shape[0], g.shape[2], -1)
+
+        k_cache, v_cache = unpage(k_cache), unpage(v_cache)
+        if k_scale is not None:
+            k_scale, v_scale = unpage(k_scale), unpage(v_scale)
+
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
 
     if mode == "pallas" and k_cache.dtype == jnp.int8:
         # the Pallas kernel needs a real TPU lowering (or the interpreter);

@@ -166,6 +166,7 @@ def decode_attn_cost(batch: int, kvh: int, group: int, s: int, d: int, *,
 def _search_decode_attn_block(
     batch: int, kvh: int, group: int, s: int, d: int,
     measure: Optional[Callable[[int], float]] = None,
+    cands: Optional[tuple] = None,
 ) -> DecodeAttnCandidate:
     """block_s search shared by the modeled (cached) and measured paths.
 
@@ -177,9 +178,13 @@ def _search_decode_attn_block(
     cache-bytes analogue of the GEMM search's decode-vs-prefill regimes.
     A ``measure`` callable (block_s -> time, any consistent unit) replaces
     the modeled ranking, exactly like the GEMM `auto_tune`'s measure hook;
-    legality filtering stays model-side either way.
+    legality filtering stays model-side either way. ``cands`` overrides
+    the candidate set (the paged search passes page divisors); ranking
+    and the VMEM admission rule are shared regardless.
     """
-    cands = sorted({c for c in _BS_CANDIDATES if c <= s and s % c == 0} | {s})
+    if cands is None:
+        cands = sorted({c for c in _BS_CANDIDATES
+                        if c <= s and s % c == 0} | {s})
     best: Optional[DecodeAttnCandidate] = None
     lens = sorted({max(s // 8, 1), max(s // 2, 1), s})
     for bs in cands:
@@ -221,6 +226,27 @@ def best_decode_attn_block(
     if measure is None:
         return _best_decode_attn_block_modeled(batch, kvh, group, s, d)
     return _search_decode_attn_block(batch, kvh, group, s, d, measure)
+
+
+@functools.lru_cache(maxsize=4096)
+def best_paged_decode_attn_block(
+    batch: int, kvh: int, group: int, s: int, d: int, page: int,
+) -> DecodeAttnCandidate:
+    """block_s pick for the *paged* decode-attention kernel.
+
+    The paged kernel resolves physical blocks through the block table, so
+    its S-tile must subdivide one ``page`` (``block_s | page``) — a tile
+    spanning two logical pages would straddle two discontiguous physical
+    blocks. Candidates are therefore the kernel-legal divisors of the page
+    size (plus the page itself, always legal); ranking, the
+    representative valid-length mix, and the VMEM admission rule are the
+    shared `_search_decode_attn_block` machinery. In practice the engine
+    picks pages >= the roofline's preferred tile, so this degenerates to
+    ``block_s == page`` except for very large pages.
+    """
+    cands = tuple(sorted({c for c in _BS_CANDIDATES
+                          if c <= page and page % c == 0} | {page}))
+    return _search_decode_attn_block(batch, kvh, group, s, d, cands=cands)
 
 
 @functools.lru_cache(maxsize=4096)

@@ -171,6 +171,7 @@ def attend_decode(
     pos: Array,
     cfg: ArchConfig,
     *,
+    block_tables: Optional[Array] = None,
     backend: str = "auto",
     interpret: bool = False,
     shard=None,
@@ -182,6 +183,15 @@ def attend_decode(
     the same position) or a (B,) vector (the continuous-batching engine:
     each cache row advances independently — per-row RoPE positions, per-row
     KV write indices, per-row valid lengths for the kernel's block skip).
+
+    ``block_tables`` ((B, max_blocks) int32) switches to the **paged**
+    cache: layer_cache leaves are BlockPool arrays ((N_phys, KVH, page, D)
+    values / (N_phys, KVH, page) scales shared by every row) and the KV
+    write resolves ``pos`` through the table — logical block
+    ``pos // page`` → physical pool block, offset ``pos % page`` — as a
+    per-row scatter. The engine guarantees the target block is mapped
+    before the step runs (alloc-on-demand); inactive rows' tables point at
+    the TRASH block, which absorbs their frozen garbage write.
 
     Returns (out, updated layer_cache). The new token's k/v are quantized and
     written at ``pos`` (dynamic index); attention masks positions > pos.
@@ -198,7 +208,24 @@ def attend_decode(
     )
     kq, ks, vq, vs = quantize_kv_cached(k, v)  # (B,KVH,1,D) / (B,KVH,1)
 
-    if ragged:
+    if block_tables is not None:
+        # paged write: scatter each row's new token into its mapped pool
+        # block (advanced-index scatter over (phys, kvh, offset))
+        page = layer_cache["k"].shape[2]
+        pos_v = pos.astype(jnp.int32) if ragged \
+            else jnp.full((b,), pos, jnp.int32)
+        phys = jnp.take_along_axis(
+            block_tables.astype(jnp.int32), (pos_v // page)[:, None],
+            axis=1)
+        i0 = phys  # (B, 1)
+        i1 = jnp.arange(layer_cache["k"].shape[1])[None, :]  # (1, KVH)
+        i2 = (pos_v % page)[:, None]  # (B, 1)
+
+        def write(cache, val, axis):
+            del axis
+            return cache.at[i0, i1, i2].set(
+                val[:, :, 0].astype(cache.dtype))
+    elif ragged:
         def write(cache, val, axis):
             # per-row scatter: each batch row updates its own position
             return jax.vmap(
@@ -234,6 +261,7 @@ def attend_decode(
         new_cache["k_scale"],
         new_cache["v_scale"],
         length=length,
+        block_tables=block_tables,
         backend=backend,
         interpret=interpret,
     )

@@ -251,11 +251,12 @@ def dense_block_prefill(params: dict, x: Array, ctx: ModelContext):
 
 
 def dense_block_decode(params: dict, x: Array, layer_cache: dict, pos: Array,
-                       ctx: ModelContext):
+                       ctx: ModelContext, *, block_tables=None):
     cfg = ctx.cfg
     h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
     a, new_cache = attn_mod.attend_decode(
-        params["attn"], h, layer_cache, pos, cfg, shard=ctx.shard, **ctx.kw
+        params["attn"], h, layer_cache, pos, cfg,
+        block_tables=block_tables, shard=ctx.shard, **ctx.kw
     )
     x = x + a
     h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)

@@ -462,7 +462,7 @@ def _vlm_prefill(params, h, image_embeds, cfg, ctx, max_len):
 
 
 def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig,
-                ctx: ModelContext):
+                ctx: ModelContext, *, block_tables: Optional[Array] = None):
     """One token for every sequence. tokens: (B, 1) (audio: (B, 1, n_cb)).
 
     ``cache["pos"]`` may be a scalar (lockstep: all rows at the same
@@ -471,9 +471,19 @@ def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig,
     what makes ragged batches free: RoPE, the KV write index, and the
     decode-attention valid length are all per-row downstream of it.
 
+    ``block_tables`` ((B, max_blocks) int32) switches the attention cache
+    to the paged BlockPool layout (dense/moe only): the tables are shared
+    by every layer (the layer scan closes over them; only the pool leaves
+    are scanned) and every KV read/write resolves through them — see
+    `attention.attend_decode`.
+
     Returns (logits, new_cache). This is the function the decode_32k /
     long_500k dry-run cells lower — the ABQ regime.
     """
+    if block_tables is not None and cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV decode needs a pos-indexed pure-attention cache "
+            f"(dense/moe), got {cfg.family!r}")
     pos = cache["pos"]
     h = embed_tokens(params, tokens, cfg, ctx)
     new_cache: dict[str, Any] = {"pos": pos + 1}
@@ -482,7 +492,8 @@ def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig,
         def body(carry, xs):
             x = carry
             lp, lc = xs
-            x, nc = B.dense_block_decode(lp, x, lc, pos, ctx)
+            x, nc = B.dense_block_decode(lp, x, lc, pos, ctx,
+                                         block_tables=block_tables)
             return x, nc
 
         h, updated = jax.lax.scan(body, h, (params["blocks"], cache["attn"]),
@@ -761,7 +772,8 @@ def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
 def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
                        active: Array, sampling: dict, base_key: Array,
                        cfg: ArchConfig, ctx: ModelContext, *,
-                       sample: bool = True):
+                       sample: bool = True,
+                       block_tables: Optional[Array] = None):
     """One continuous-batching engine step: every slot decodes at its own
     position with its own sampling parameters; one compiled function serves
     any slot occupancy.
@@ -786,6 +798,10 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
     argmax ignores the sampler — so flipping the flag never changes a
     greedy row's stream).
 
+    ``block_tables`` routes the attention cache through the paged
+    BlockPool indirection (see `decode_step`); the engine keeps the tables
+    host-side next to pos/active and uploads them only on block events.
+
     Returns (next_tok (B, 1), new_cache) — ``new_cache`` has no "pos" (the
     engine owns positions host-side and passes them in each step).
     """
@@ -794,7 +810,8 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
             f"continuous batching not implemented for family {cfg.family!r}")
     c = dict(cache)
     c["pos"] = pos.astype(jnp.int32)
-    logits, new_cache = decode_step(params, c, tok, cfg, ctx)
+    logits, new_cache = decode_step(params, c, tok, cfg, ctx,
+                                    block_tables=block_tables)
     greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
     if sample:
         fold = lambda s, t: jax.random.fold_in(

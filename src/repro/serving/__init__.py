@@ -2,11 +2,16 @@
 
 `engine.Engine` owns the slot pool (fixed cache rows) and the step loop;
 `scheduler.Scheduler` decides who gets a free slot when; `request.Request`
-carries per-request sampling parameters and the streamed token buffer.
+carries per-request sampling parameters and the streamed token buffer;
+`paged.BlockPool` replaces contiguous cache rows with block-granular paged
+allocation (``Engine(kv_block_size=...)``) so admission is bounded by
+actual tokens, not worst-case request length.
 """
 
 from repro.serving.engine import Engine
+from repro.serving.paged import BlockPool
 from repro.serving.request import Request, RequestState, SamplingParams
 from repro.serving.scheduler import Scheduler
 
-__all__ = ["Engine", "Request", "RequestState", "SamplingParams", "Scheduler"]
+__all__ = ["BlockPool", "Engine", "Request", "RequestState",
+           "SamplingParams", "Scheduler"]

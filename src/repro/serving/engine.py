@@ -58,6 +58,35 @@ engine step (`lm.prefill_chunk`), so a long prompt never stalls running
 decodes for more than a chunk's worth of work; chunked rows attend over
 their own already-quantized prefix — decode numerics, not one-shot-prefill
 numerics.
+
+Paged KV allocation (``kv_block_size``)
+---------------------------------------
+
+By default every slot owns a contiguous ``max_len``-position cache row, so
+admission capacity is bounded by worst-case request length (a short
+request strands the tail of its row). ``kv_block_size=B`` switches the
+attention cache to **paged** allocation (`repro.serving.paged.BlockPool`,
+dense/moe only): the device cache becomes a pool of B-token physical
+blocks plus matching per-scale pages, each slot maps logical positions
+through a block table, and blocks are taken from a free list on demand —
+ceil(prefill_extent / B) at admission, then one at a time as the decode
+frontier crosses a block boundary — and all returned at retirement.
+Admission then gates on **free-block count, not free-slot count**: a
+request reserves only its own worst-case blocks (prompt + generation
+budget + horizon headroom), so under the same cache byte budget the pool
+admits strictly more concurrent short requests than ``pool_tokens /
+max_len`` slot rows would (run ``n_slots`` higher than the slot-row
+equivalent to expose the extra concurrency; `bench_serving` gates the
+win). The decode step is unchanged except for the table indirection —
+paged greedy decode is bitwise identical to the slot-row path whenever
+both run the same attention tile partition (always true of the jnp paths
+the tests pin; a TPU run whose tuner picks different block_s for pool
+pages vs contiguous rows is numerically, not bitwise, equivalent) — and
+the one-transfer-per-step discipline holds: block tables are
+tiny int32 host→device uploads on block events, and the step's single
+device→host transfer is still the stacked-token block. Worst-case
+reservation keeps the no-preemption engine deadlock-free; optimistic
+overcommit arrives with preemption/swapping (ROADMAP).
 """
 
 from __future__ import annotations
@@ -72,6 +101,7 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.models import lm
 from repro.models.blocks import ModelContext
+from repro.serving.paged import BlockPool, init_paged_cache
 from repro.serving.request import (
     FINISHED,
     PREFILLING,
@@ -95,6 +125,8 @@ class Engine:
                  prefill_bucket: int = 16,
                  prefill_chunk: Optional[int] = None,
                  step_horizon: int = 1,
+                 kv_block_size: Optional[int] = None,
+                 kv_pool_tokens: Optional[int] = None,
                  base_seed: int = 0):
         if cfg.family not in _ENGINE_FAMILIES:
             raise NotImplementedError(
@@ -115,9 +147,40 @@ class Engine:
         self.step_horizon = step_horizon
         self._base_key = jax.random.PRNGKey(base_seed)
 
-        cache = lm.init_cache(cfg, n_slots, max_len)
-        cache.pop("pos")  # positions are per-row, threaded per step
-        self.cache = cache
+        self.pool: Optional[BlockPool] = None
+        if kv_block_size is not None:
+            if cfg.family not in ("dense", "moe"):
+                raise NotImplementedError(
+                    "paged KV needs a pos-indexed pure-attention cache "
+                    f"(dense/moe), got {cfg.family!r}")
+            if prefill_chunk is not None:
+                raise NotImplementedError(
+                    "chunked prefill over the paged pool is not implemented "
+                    "(attend_chunk reads contiguous rows); use one or the "
+                    "other")
+            if max_len % kv_block_size:
+                raise ValueError(
+                    f"max_len ({max_len}) must be a multiple of "
+                    f"kv_block_size ({kv_block_size})")
+            pool_tokens = n_slots * max_len if kv_pool_tokens is None \
+                else kv_pool_tokens
+            if pool_tokens % kv_block_size:
+                raise ValueError(
+                    f"kv_pool_tokens ({pool_tokens}) must be a multiple of "
+                    f"kv_block_size ({kv_block_size})")
+            self.pool = BlockPool(pool_tokens // kv_block_size,
+                                  kv_block_size, n_slots=n_slots,
+                                  max_blocks=max_len // kv_block_size)
+            self.cache = init_paged_cache(cfg, self.pool)
+        else:
+            if kv_pool_tokens is not None:
+                raise ValueError(
+                    "kv_pool_tokens only applies to paged mode — pass "
+                    "kv_block_size as well (silently building slot rows "
+                    "would ignore the requested budget)")
+            cache = lm.init_cache(cfg, n_slots, max_len)
+            cache.pop("pos")  # positions are per-row, threaded per step
+            self.cache = cache
         self._tok = jnp.zeros((n_slots, 1), jnp.int32)
         # host mirrors of the per-row state (python bookkeeping reads
         # these); the device copies in self._dev are the step inputs
@@ -141,13 +204,13 @@ class Engine:
         self.stats = {"steps": 0, "device_steps": 0, "transfers": 0,
                       "occupancy_sum": 0.0, "tokens_out": 0,
                       "admitted": 0, "finished": 0, "prefill_chunks": 0,
-                      "horizon": step_horizon}
+                      "peak_running": 0, "horizon": step_horizon}
 
         # params are engine-constant: captured in the jit closures so the
         # (large) param tree is never flattened/hashed per call; `sample`
         # is a static flag — the all-greedy specialization compiles the
         # sampler out of the hot loop (greedy tokens are flag-invariant)
-        self._step_fn = jax.jit(self._raw_step, static_argnums=(10,))
+        self._step_fn = jax.jit(self._raw_step, static_argnums=(11,))
         self._admit_fns: dict[tuple[int, int, bool], callable] = {}
         self._chunk_mid_fn = None
         self._chunk_last_fn = None
@@ -166,6 +229,9 @@ class Engine:
             "top_k": jnp.asarray(self._top_k),
             "top_p": jnp.asarray(self._top_p),
             "seed": jnp.asarray(self._seed),
+            # paged mode: the block tables ride along with the row state
+            # (tiny int32 host→device upload, only on slot/block events)
+            "bt": None if self.pool is None else jnp.asarray(self.pool.table),
         }
 
     # ------------------------------------------------------------------
@@ -173,10 +239,13 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _raw_step(self, cache, tok, pos, step, active, greedy, temp,
-                  top_k, top_p, seed, sample):
+                  top_k, top_p, seed, bt, sample):
         """H = step_horizon ragged decode steps as one lax.scan; emits the
         H consumed tokens (the stream the host appends) and the advanced
-        carry. Inactive rows freeze inside ragged_decode_step."""
+        carry. Inactive rows freeze inside ragged_decode_step. ``bt`` is
+        the (B, max_blocks) block-table array in paged mode, else None;
+        the host pre-maps every block the horizon can touch, so the tables
+        are loop-invariant across the scan."""
         base = {"greedy": greedy, "temperature": temp, "top_k": top_k,
                 "top_p": top_p, "seed": seed}
 
@@ -185,7 +254,7 @@ class Engine:
             nxt, nc = lm.ragged_decode_step(
                 self.params, cache, tok, pos, active,
                 dict(base, step=step), self._base_key, self.cfg, self.ctx,
-                sample=sample)
+                sample=sample, block_tables=bt)
             new_pos = nc.pop("pos")
             new_step = step + active.astype(jnp.int32)
             return (nxt, new_pos, new_step, nc), tok
@@ -216,20 +285,60 @@ class Engine:
             vocab_size=self.cfg.vocab_size)
         return jnp.where(greedy[:, None], arg, sampled)
 
+    def _insert_blocks(self, pool_cache: dict, rows: dict, phys) -> dict:
+        """Scatter a batch-k prefill cache into the paged pool. ``rows``
+        leaves are (L, k, KVH, P, ...) with P a whole number of blocks;
+        ``phys`` is (k, P // block_size) int32 physical block ids — the
+        blocks the pool mapped for these slots at admission."""
+        bs = self.pool.block_size
+        flat = phys.reshape(-1)
+
+        def one(p, r):
+            ell, k, kvh = r.shape[0], r.shape[1], r.shape[2]
+            nb = r.shape[3] // bs
+            if r.ndim == 5:
+                rb = r.reshape(ell, k, kvh, nb, bs, r.shape[4]) \
+                     .transpose(0, 1, 3, 2, 4, 5) \
+                     .reshape(ell, k * nb, kvh, bs, r.shape[4])
+            else:
+                rb = r.reshape(ell, k, kvh, nb, bs) \
+                     .transpose(0, 1, 3, 2, 4) \
+                     .reshape(ell, k * nb, kvh, bs)
+            return p.at[:, flat].set(rb.astype(p.dtype))
+
+        return {"attn": jax.tree.map(one, pool_cache["attn"], rows["attn"])}
+
     def _admit_fn(self, padded_len: int, k: int, sample: bool):
         """Batched prefill-and-install for k same-bucket admissions,
         compiled once per (bucket length, k, sampling?)."""
         if (padded_len, k, sample) not in self._admit_fns:
-            def f(cache, tok, toks, last_pos, slots, seed, temp, top_k,
-                  top_p, greedy):
-                logits, rows = lm.prefill(self.params, toks, self.cfg,
-                                          self.ctx, max_len=self.max_len,
-                                          last_pos=last_pos)
-                new_cache = self._insert_rows(cache, rows, slots)
-                first = self._first_tokens(logits, seed, temp, top_k, top_p,
-                                           greedy, sample)
-                tok = tok.at[slots].set(first)
-                return tok, new_cache
+            if self.pool is None:
+                def f(cache, tok, toks, last_pos, slots, seed, temp, top_k,
+                      top_p, greedy):
+                    logits, rows = lm.prefill(self.params, toks, self.cfg,
+                                              self.ctx, max_len=self.max_len,
+                                              last_pos=last_pos)
+                    new_cache = self._insert_rows(cache, rows, slots)
+                    first = self._first_tokens(logits, seed, temp, top_k,
+                                               top_p, greedy, sample)
+                    tok = tok.at[slots].set(first)
+                    return tok, new_cache
+            else:
+                # paged: the prefill KV is padded only to whole blocks
+                # (not max_len) and scattered straight into the pool
+                bs = self.pool.block_size
+                p_len = -(-padded_len // bs) * bs
+
+                def f(cache, tok, toks, last_pos, slots, phys, seed, temp,
+                      top_k, top_p, greedy):
+                    logits, rows = lm.prefill(self.params, toks, self.cfg,
+                                              self.ctx, max_len=p_len,
+                                              last_pos=last_pos)
+                    new_cache = self._insert_blocks(cache, rows, phys)
+                    first = self._first_tokens(logits, seed, temp, top_k,
+                                               top_p, greedy, sample)
+                    tok = tok.at[slots].set(first)
+                    return tok, new_cache
 
             self._admit_fns[(padded_len, k, sample)] = jax.jit(f)
         return self._admit_fns[(padded_len, k, sample)]
@@ -285,18 +394,20 @@ class Engine:
         if not isinstance(request, Request):
             request = Request(prompt=tuple(request), **kw)
         L = len(request.prompt)
-        if self.prefill_chunk is not None and L > self.prefill_chunk:
-            # chunked prefill pads the final chunk to a full chunk width
-            extent = -(-L // self.prefill_chunk) * self.prefill_chunk
-        else:
-            extent = self._padded_len(L)  # bucket-padded one-shot prefill
-        need = max(extent, L + request.max_new_tokens + self.step_horizon - 1)
+        extent = self._prefill_extent(L)
+        need = self._need_tokens(request)
         if need > self.max_len:
             raise ValueError(
                 f"prompt ({L}, padded prefill extent {extent}) + "
                 f"max_new_tokens ({request.max_new_tokens}) + horizon "
                 f"headroom ({self.step_horizon - 1}) exceeds cache max_len "
                 f"({self.max_len})")
+        if self.pool is not None \
+                and self.pool.blocks_for(need) > self.pool.n_blocks:
+            raise ValueError(
+                f"request needs {self.pool.blocks_for(need)} KV blocks but "
+                f"the pool only has {self.pool.n_blocks} — it could never "
+                "be admitted")
         state = RequestState(request=request, request_id=self._next_id,
                              arrival_t=time.time())
         self._next_id += 1
@@ -333,11 +444,27 @@ class Engine:
             self._pending_slots = []
 
         # 2) admission into free slots (freed this step included);
-        # same-bucket admissions batch into one compiled call
+        # same-bucket admissions batch into one compiled call. In paged
+        # mode admission additionally gates on free-block count: a request
+        # only reserves its own worst-case blocks (not a max_len row), so
+        # short requests pack — but when the pool runs dry the head of the
+        # queue waits (clean backpressure, no reordering past it).
         free = [i for i, s in enumerate(self._slots) if s is None]
         if free:
+            can_admit = None
+            if self.pool is not None:
+                tentative = {"blocks": 0}
+
+                def can_admit(st, _t=tentative):
+                    nb = self.pool.blocks_for(self._need_tokens(st.request))
+                    if self.pool.can_reserve(_t["blocks"] + nb):
+                        _t["blocks"] += nb
+                        return True
+                    return False
+
             admits = self.scheduler.pop_admissions(len(free),
-                                                   self.prefill_chunk)
+                                                   self.prefill_chunk,
+                                                   can_admit=can_admit)
             batch: dict[int, list[tuple[RequestState, int]]] = {}
             for st in admits:
                 slot = free.pop(0)
@@ -345,6 +472,10 @@ class Engine:
                 st.admit_t = time.time()
                 self._slots[slot] = st
                 self._set_row_params(slot, st)
+                if self.pool is not None:
+                    self.pool.reserve(
+                        slot,
+                        self.pool.blocks_for(self._need_tokens(st.request)))
                 self.stats["admitted"] += 1
                 if self.prefill_chunk is not None \
                         and st.prompt_len > self.prefill_chunk:
@@ -368,10 +499,21 @@ class Engine:
         running = [(i, s) for i, s in enumerate(self._slots)
                    if s is not None and s.status == RUNNING]
         if running:
+            if self.pool is not None:
+                # alloc-on-demand: map every block the horizon's writes
+                # can touch (positions pos .. pos+H-1) before the compiled
+                # step runs — within-reservation, so this can never fail
+                bs = self.pool.block_size
+                for slot, _ in running:
+                    n = -(-(int(self._pos[slot]) + self.step_horizon) // bs)
+                    if self.pool.ensure(slot, n):
+                        self._dirty = True
             if self._dirty:
                 self._push_rows()
                 self._dirty = False
             self.stats["occupancy_sum"] += len(running) / self.n_slots
+            self.stats["peak_running"] = max(self.stats["peak_running"],
+                                             len(running))
             self.stats["transfers"] += 1
             self.stats["device_steps"] += 1
             d = self._dev
@@ -379,7 +521,8 @@ class Engine:
             emitted, self._tok, d["pos"], d["step"], self.cache = \
                 self._step_fn(self.cache, self._tok, d["pos"], d["step"],
                               d["active"], d["greedy"], d["temp"],
-                              d["top_k"], d["top_p"], d["seed"], sample)
+                              d["top_k"], d["top_p"], d["seed"], d["bt"],
+                              sample)
             self._pending = np.asarray(emitted)  # one device→host transfer
             self._pending_slots = running
             # replay the device update on the host mirrors (no transfer)
@@ -405,6 +548,28 @@ class Engine:
         b = self.prefill_bucket
         return -(-L // b) * b
 
+    def _prefill_extent(self, L: int) -> int:
+        """Cache positions the admission prefill writes (incl. padding)."""
+        if self.prefill_chunk is not None and L > self.prefill_chunk:
+            # chunked prefill pads the final chunk to a full chunk width
+            extent = -(-L // self.prefill_chunk) * self.prefill_chunk
+        else:
+            extent = self._padded_len(L)  # bucket-padded one-shot prefill
+        if self.pool is not None:
+            # the paged prefill scatters whole blocks into the pool
+            bs = self.pool.block_size
+            extent = -(-extent // bs) * bs
+        return extent
+
+    def _need_tokens(self, request: Request) -> int:
+        """Worst-case cache positions the request can touch — what the
+        slot-row path sizes against max_len and the paged path reserves
+        blocks for (the horizon tail: a row finishing mid-block still
+        writes through the end of its block)."""
+        L = len(request.prompt)
+        return max(self._prefill_extent(L),
+                   L + request.max_new_tokens + self.step_horizon - 1)
+
     def _set_row_params(self, slot: int, st: RequestState) -> None:
         sp = st.request.sampling
         self._greedy[slot] = sp.greedy
@@ -424,10 +589,21 @@ class Engine:
             slots[j] = slot
             last[j] = st.prompt_len - 1
         fn = self._admit_fn(padded, k, sample)
-        self._tok, self.cache = fn(
-            self.cache, self._tok, jnp.asarray(toks), last, slots,
-            self._seed[slots], self._temp[slots], self._top_k[slots],
-            self._top_p[slots], self._greedy[slots])
+        if self.pool is not None:
+            bs = self.pool.block_size
+            nb = -(-padded // bs)
+            for _, slot in group:
+                self.pool.ensure(slot, nb)  # map the prefill extent
+            phys = jnp.asarray(self.pool.table[slots, :nb])
+            self._tok, self.cache = fn(
+                self.cache, self._tok, jnp.asarray(toks), last, slots, phys,
+                self._seed[slots], self._temp[slots], self._top_k[slots],
+                self._top_p[slots], self._greedy[slots])
+        else:
+            self._tok, self.cache = fn(
+                self.cache, self._tok, jnp.asarray(toks), last, slots,
+                self._seed[slots], self._temp[slots], self._top_k[slots],
+                self._top_p[slots], self._greedy[slots])
         for st, slot in group:
             self._start_running(slot, st, st.prompt_len)
 
@@ -475,6 +651,11 @@ class Engine:
         st.slot = -1
         self._slots[slot] = None
         self._active[slot] = False
+        if self.pool is not None:
+            # free-on-retire: every held block returns to the free list in
+            # the same host step; the table row snaps back to TRASH so the
+            # retired row's frozen write can't touch a reused block
+            self.pool.release(slot)
         self._dirty = True
         self.stats["finished"] += 1
 

@@ -1,0 +1,182 @@
+"""Paged (block-granular) allocation for the engine's int8 KV cache.
+
+The slot-row cache reserves ``max_len`` positions per request for its whole
+lifetime, so admission capacity is bounded by the *worst-case* request
+length: a 14-token request strands the other ``max_len - 14`` positions of
+its row. ABQ's 2.7x KV compression only turns into real concurrency if the
+runtime can pack that freed memory — which is what this module does, the
+vLLM idea restricted to what the repo's no-preemption engine can keep
+sound:
+
+* The device cache is a **pool** of ``n_blocks`` physical blocks of
+  ``block_size`` tokens each (per layer, per KV head — the same
+  attention-native int8 values + f32 per-token scales as the slot rows,
+  just chopped on the sequence axis). Leaf layout:
+  ``(L, n_blocks + 1, KVH, block_size, D)`` — physical block 0 is the
+  TRASH block (see below), ids ``1..n_blocks`` are allocatable.
+* Each slot owns a **block table**: a ``(max_blocks,)`` row mapping
+  logical block index (``pos // block_size``) to physical block id.
+  Unmapped entries point at TRASH. The table lives host-side here and is
+  mirrored to the device as one small int32 array; every KV read/write in
+  the decode step resolves through it (gather/scatter indirection in
+  `attention.attend_decode`, scalar-prefetched index maps in the Pallas
+  kernel's paged mode).
+* **Free-list allocation, alloc-on-demand**: physical blocks are taken
+  from the free list only when a slot's write frontier crosses into an
+  unmapped logical block (at admission for the prefill extent, then one
+  block at a time as decode advances). Retirement returns every held
+  block to the free list in the same host step, so a short request's
+  memory is reusable the moment it finishes — internal fragmentation is
+  bounded by one partial block per live request.
+* **Reservation accounting** keeps the no-preemption engine deadlock-free:
+  admission reserves the request's worst-case block count (prompt extent +
+  generation budget + horizon headroom) and the free list can never be
+  exhausted by a within-reservation demand (``sum(allocated) <=
+  sum(reserved) <= n_blocks``). This is still strictly better than slot
+  rows — a slot row is a ``max_len``-token reservation regardless of the
+  request — it just forgoes optimistic overcommit until the engine can
+  preempt (ROADMAP: preemption/swapping is the next deferred item).
+
+The TRASH block absorbs the compiled step's frozen-row writes: free,
+retired and queued slots still flow through the one compiled decode step
+(one specialization serves every occupancy) and their discarded KV write
+must land *somewhere*. With slot rows, "somewhere" was the row they owned;
+with a shared pool it must never be another request's block — so inactive
+slots' tables point every entry at TRASH, whose contents nothing ever
+attends (an active row's per-row ``length`` only reaches mapped blocks).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.configs import ArchConfig
+
+#: physical block id every unmapped table entry points at; never allocated.
+TRASH = 0
+
+
+class BlockPool:
+    """Fixed pool of ``block_size``-token KV blocks + per-slot block tables.
+
+    Host-side bookkeeping only — the device arrays are built by
+    `init_paged_cache` and scattered into by the engine; the pool decides
+    *which* physical block a logical position maps to.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, *, n_slots: int,
+                 max_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"need at least one block, got {n_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.n_blocks = n_blocks          # allocatable (excludes TRASH)
+        self.block_size = block_size
+        self.n_slots = n_slots
+        self.max_blocks = max_blocks      # table width = max_len // block_size
+        # physical ids are 1..n_blocks; 0 is TRASH. LIFO free list, seeded
+        # so the first pop hands out block 1.
+        self._free: List[int] = list(range(n_blocks, 0, -1))
+        self._held: List[List[int]] = [[] for _ in range(n_slots)]
+        self._reserved = np.zeros(n_slots, np.int64)
+        self.table = np.full((n_slots, max_blocks), TRASH, np.int32)
+        self.peak_used = 0
+
+    # -- capacity queries ------------------------------------------------
+
+    @property
+    def n_phys(self) -> int:
+        """Physical rows in the device pool arrays (incl. TRASH)."""
+        return self.n_blocks + 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return int(self._reserved.sum())
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks covering ``tokens`` cache positions."""
+        return -(-int(tokens) // self.block_size)
+
+    def can_reserve(self, n: int) -> bool:
+        """Would a worst-case reservation of ``n`` blocks fit right now?"""
+        return n <= self.n_blocks - self.reserved_blocks
+
+    def held(self, slot: int) -> List[int]:
+        return list(self._held[slot])
+
+    # -- lifecycle -------------------------------------------------------
+
+    def reserve(self, slot: int, n: int) -> None:
+        """Reserve ``n`` blocks worst-case for ``slot`` (at admission)."""
+        if self._reserved[slot]:
+            raise RuntimeError(f"slot {slot} already holds a reservation")
+        if n > self.max_blocks:
+            raise ValueError(
+                f"reservation of {n} blocks exceeds the per-request table "
+                f"width ({self.max_blocks})")
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"pool exhausted: {n} blocks requested, "
+                f"{self.n_blocks - self.reserved_blocks} unreserved "
+                "(admission should have gated on can_reserve)")
+        self._reserved[slot] = n
+
+    def ensure(self, slot: int, n_logical: int) -> bool:
+        """Map logical blocks ``0 .. n_logical-1`` of ``slot``, allocating
+        from the free list on demand. Returns True if the table changed
+        (the engine re-uploads the device mirror). Within-reservation
+        demands can never fail: ``sum(allocated) <= sum(reserved) <=
+        n_blocks`` keeps the free list deep enough."""
+        held = self._held[slot]
+        if n_logical <= len(held):
+            return False
+        if n_logical > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot} needs {n_logical} blocks but reserved only "
+                f"{int(self._reserved[slot])} — reservation accounting bug")
+        for i in range(len(held), n_logical):
+            blk = self._free.pop()
+            held.append(blk)
+            self.table[slot, i] = blk
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free every block ``slot`` holds and drop its reservation (at
+        retirement). The table row snaps back to TRASH so the retired
+        row's frozen garbage write can never land in a reused block."""
+        self._free.extend(reversed(self._held[slot]))
+        self._held[slot] = []
+        self._reserved[slot] = 0
+        self.table[slot, :] = TRASH
+
+    def stats(self) -> dict:
+        return {
+            "n_blocks": self.n_blocks,
+            "block_size": self.block_size,
+            "free_blocks": self.free_blocks,
+            "used_blocks": self.used_blocks,
+            "reserved_blocks": self.reserved_blocks,
+            "peak_used_blocks": self.peak_used,
+        }
+
+
+def init_paged_cache(cfg: ArchConfig, pool: BlockPool) -> dict:
+    """Device pool arrays: the slot-row cache layout with the batch axis
+    replaced by physical blocks and the sequence axis by ``block_size``
+    (leaves ``(L, n_phys, KVH, block_size, D)`` int8 values /
+    ``(L, n_phys, KVH, block_size)`` f32 scales)."""
+    from repro.models import attention as attn_mod
+
+    return {"attn": attn_mod.init_kv_cache(cfg, pool.n_phys,
+                                           pool.block_size)}

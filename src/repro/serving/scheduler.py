@@ -41,17 +41,27 @@ class Scheduler:
                        (state.request.priority, next(self._seq), state))
 
     def pop_admissions(self, n_free: int,
-                       chunk: Optional[int] = None) -> list[RequestState]:
+                       chunk: Optional[int] = None,
+                       can_admit=None) -> list[RequestState]:
         """Pop up to ``n_free`` requests for this step's free slots.
 
         ``chunk`` is the engine's prefill-chunk size (None: whole-prompt
         prefill); the first prefill installment of each admitted request is
-        charged against ``max_prefill_tokens``."""
+        charged against ``max_prefill_tokens``.
+
+        ``can_admit`` (RequestState -> bool) is the engine's resource gate
+        — in paged-KV mode, "does the pool have this request's worst-case
+        blocks free". Unlike the prefill budget it also applies to the
+        head of the queue (an exhausted pool admits nobody), and it never
+        reorders past a refused head: skipping ahead to smaller requests
+        would starve the big one behind a stream of shorts."""
         admitted: list[RequestState] = []
         budget = self.max_prefill_tokens
         spent = 0
         while self._heap and len(admitted) < n_free:
             _, _, state = self._heap[0]
+            if can_admit is not None and not can_admit(state):
+                break  # resource backpressure: stays queued, FIFO-faithful
             cost = state.prompt_len if chunk is None \
                 else min(state.prompt_len, chunk)
             if admitted and budget is not None and spent + cost > budget:

@@ -1,0 +1,70 @@
+"""Docs-consistency gate: docs/REFERENCE.md cannot silently rot.
+
+Every ``REPRO_*`` environment variable that appears in the source tree
+(src/, benchmarks/, examples/) must be documented in docs/REFERENCE.md,
+and every variable the docs claim exists must still appear in the code —
+drift in either direction fails. A couple of structural anchors
+(the serving surface and the --check failure names) are pinned the same
+way so the reference tracks the code it describes.
+"""
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+REFERENCE = REPO / "docs" / "REFERENCE.md"
+ARCHITECTURE = REPO / "docs" / "ARCHITECTURE.md"
+_VAR = re.compile(r"REPRO_[A-Z0-9_]+")
+
+
+def _source_vars() -> set:
+    found = set()
+    for sub in ("src", "benchmarks", "examples"):
+        for py in (REPO / sub).rglob("*.py"):
+            found |= set(_VAR.findall(py.read_text()))
+    return found
+
+
+def test_every_env_var_is_documented():
+    ref = REFERENCE.read_text()
+    documented = set(_VAR.findall(ref))
+    in_code = _source_vars()
+    missing = in_code - documented
+    assert not missing, (
+        f"REPRO_* vars read in the code but absent from docs/REFERENCE.md: "
+        f"{sorted(missing)}")
+    stale = documented - in_code
+    assert not stale, (
+        f"docs/REFERENCE.md documents vars no longer in the code: "
+        f"{sorted(stale)}")
+
+
+def test_reference_pins_serving_surface():
+    ref = REFERENCE.read_text()
+    for anchor in ("Server.generate", "Server.engine", "kv_block_size",
+                   "kv_pool_tokens", "step_horizon", "prefill_chunk",
+                   "top_p", "eos_id", "BENCH_serving.json"):
+        assert anchor in ref, f"REFERENCE.md lost its {anchor!r} section"
+
+
+def test_reference_matches_check_failure_names():
+    """The --check failure names documented must be the ones run.py can
+    actually emit (string-level pin; run.py is import-cheap but the
+    failure list is data in the source)."""
+    ref = REFERENCE.read_text()
+    run_src = (REPO / "benchmarks" / "run.py").read_text()
+    names = set(re.findall(r'failures\.append\("([a-z_]+)"\)', run_src))
+    assert names, "no failure names found in benchmarks/run.py"
+    for name in names:
+        assert name in ref, (
+            f"run.py --check failure {name!r} is not documented in "
+            "docs/REFERENCE.md")
+
+
+def test_architecture_doc_exists_and_points_at_real_files():
+    """Every `src/...` path ARCHITECTURE.md references must exist."""
+    text = ARCHITECTURE.read_text()
+    paths = set(re.findall(r"`(src/[\w/\.]+\.py)(?::\d+)?`", text))
+    assert len(paths) >= 10, "ARCHITECTURE.md should map the source tree"
+    for p in sorted(paths):
+        assert (REPO / p).exists(), f"ARCHITECTURE.md references missing {p}"

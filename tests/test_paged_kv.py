@@ -1,0 +1,325 @@
+"""Paged int8 KV-cache tests: BlockPool mechanics, engine integration,
+and the paged decode-attention kernel.
+
+The load-bearing claim is bitwise equivalence: paged decode must emit
+exactly the slot-row path's tokens on greedy ragged batches (the block
+table is an addressing change, not a numerics change). Around that: the
+allocation edges — pool exhaustion is clean admission backpressure (the
+request stays queued, nothing crashes), retirement returns blocks for
+immediate reuse, internal fragmentation stays under one block per live
+request — and kernel-level proof (NaN poison) that the paged Pallas
+index maps stream only mapped, valid blocks.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import tiny
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from repro.models.quantized import QuantizeConfig, quantize_model
+from repro.serving import BlockPool, Engine, Request
+from repro.serving.paged import TRASH
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = tiny("dense")
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8))
+    return cfg, ctx, qp
+
+
+def _engine(served, **kw):
+    cfg, ctx, qp = served
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_bucket", 4)
+    return Engine(qp, cfg, ctx, **kw)
+
+
+def _prompts(cfg, rng, n, lo=3, hi=12):
+    return [rng.integers(0, cfg.vocab_size, size=int(s)).tolist()
+            for s in rng.integers(lo, hi, size=n)]
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: paged engine == contiguous slot-row engine
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_contiguous_bitwise(served):
+    """Ragged greedy workload through 2 slots (forced queueing + mid-run
+    block reuse): the paged engine must emit exactly the slot-row
+    engine's tokens, request for request."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(0)
+    prompts = _prompts(cfg, rng, 6)
+    gens = [int(g) for g in rng.integers(2, 9, size=6)]
+
+    def run(**kw):
+        eng = _engine(served, **kw)
+        sts = [eng.submit(Request(prompt=tuple(p), max_new_tokens=g))
+               for p, g in zip(prompts, gens)]
+        eng.run()
+        assert eng.stats["transfers"] == eng.stats["device_steps"]
+        return [s.output() for s in sts]
+
+    assert run() == run(kv_block_size=8)
+
+
+def test_paged_matches_contiguous_multi_horizon(served):
+    """Same parity under multi-step scheduling (H=3): the horizon tail's
+    garbage writes land in mapped (reserved) blocks, never a neighbor's."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(1)
+    prompts = _prompts(cfg, rng, 4)
+
+    def run(**kw):
+        eng = _engine(served, step_horizon=3, **kw)
+        sts = [eng.submit(Request(prompt=tuple(p), max_new_tokens=5))
+               for p in prompts]
+        eng.run()
+        return [s.output() for s in sts]
+
+    assert run() == run(kv_block_size=8)
+
+
+def test_paged_moe_family(served):
+    cfg = tiny("moe")
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8))
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, size=6).tolist()
+
+    outs = []
+    for kw in ({}, {"kv_block_size": 8}):
+        eng = Engine(qp, cfg, ctx, n_slots=2, max_len=32,
+                     prefill_bucket=4, **kw)
+        st = eng.submit(Request(prompt=tuple(p), max_new_tokens=4))
+        eng.run()
+        outs.append(st.output())
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# allocation edges
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_is_clean_backpressure(served):
+    """A pool too small for two concurrent requests admits one; the other
+    stays queued (no crash, no partial admission) even though a SLOT is
+    free, and completes after the first retires."""
+    rng = np.random.default_rng(3)
+    cfg, _, _ = served
+    p1, p2 = _prompts(cfg, rng, 2, lo=4, hi=5)
+    # 5 blocks of 8 = 40 tokens; each request needs 3 blocks (4-token
+    # prompt + 18 new tokens -> 22 positions)
+    eng = _engine(served, kv_block_size=8, kv_pool_tokens=40)
+    a = eng.submit(Request(prompt=tuple(p1), max_new_tokens=18))
+    b = eng.submit(Request(prompt=tuple(p2), max_new_tokens=18))
+    eng.step()
+    assert a.status == "running"
+    assert b.status == "queued"          # blocked on blocks, not slots
+    assert eng._slots.count(None) == 1   # a slot was free the whole time
+    eng.run()
+    assert a.status == b.status == "finished"
+    assert len(a.output()) == len(b.output()) == 18
+
+    # solo-parity through the backpressure path
+    solo = _engine(served, kv_block_size=8)
+    ref = solo.submit(Request(prompt=tuple(p2), max_new_tokens=18))
+    solo.run()
+    assert b.output() == ref.output()
+
+
+def test_impossible_request_rejected_at_submit(served):
+    eng = _engine(served, kv_block_size=8, kv_pool_tokens=16)
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.submit(Request(prompt=tuple(range(1, 9)), max_new_tokens=30))
+
+
+def test_retire_then_admit_reuses_freed_blocks(served):
+    """Blocks freed at retirement are handed to the next admission."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(4)
+    p1, p2 = _prompts(cfg, rng, 2, lo=4, hi=5)
+    eng = _engine(served, n_slots=1, kv_block_size=8, kv_pool_tokens=32)
+    a = eng.submit(Request(prompt=tuple(p1), max_new_tokens=4))
+    eng.step()
+    held_a = set(eng.pool.held(0))
+    assert held_a
+    eng.run()
+    assert eng.pool.used_blocks == 0
+    assert eng.pool.free_blocks == eng.pool.n_blocks
+    b = eng.submit(Request(prompt=tuple(p2), max_new_tokens=4))
+    eng.step()
+    held_b = set(eng.pool.held(0))
+    assert held_b & held_a  # freed physical blocks were reused
+    eng.run()
+    assert len(b.output()) == 4
+
+
+def test_mid_block_waste_bounded(served):
+    """Internal fragmentation: at every step a live request holds exactly
+    ceil(frontier / block_size) blocks — under one block of waste — and
+    a mid-block retirement returns everything."""
+    cfg, _, _ = served
+    bs = 8
+    eng = _engine(served, n_slots=1, kv_block_size=bs)
+    # prompt 3 (bucket-pads to 4), 9 new tokens: frontier ends mid-block
+    st = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=9))
+    eng.step()
+    while st.status == "running":
+        pos = int(eng._pos[0])  # tokens written so far (the frontier)
+        held_tokens = len(eng.pool.held(0)) * bs
+        assert held_tokens == max(-(-pos // bs), 1) * bs
+        assert held_tokens - pos < bs  # waste < one block
+        eng.step()
+    assert st.finish_reason == "length"
+    assert eng.pool.used_blocks == 0  # mid-block retirement freed it all
+
+
+def test_trash_table_isolation(served):
+    """After retirement the slot's table rows are all TRASH — the frozen
+    row's garbage writes can never land in a reused block."""
+    eng = _engine(served, n_slots=2, kv_block_size=8)
+    st = eng.submit(Request(prompt=(5, 6, 7), max_new_tokens=3))
+    eng.step()
+    assert (eng.pool.table[0] != TRASH).any()
+    eng.run()
+    assert st.done
+    assert (eng.pool.table == TRASH).all()
+
+
+def test_paged_config_validation(served):
+    cfg, ctx, qp = served
+    with pytest.raises(ValueError, match="multiple of"):
+        Engine(qp, cfg, ctx, n_slots=2, max_len=60, kv_block_size=8)
+    with pytest.raises(NotImplementedError, match="chunked prefill"):
+        Engine(qp, cfg, ctx, n_slots=2, max_len=64, kv_block_size=8,
+               prefill_chunk=4)
+    scfg = tiny("ssm")
+    sctx = ModelContext(cfg=scfg, remat=False)
+    with pytest.raises(NotImplementedError, match="paged KV"):
+        Engine({}, scfg, sctx, n_slots=2, max_len=32, kv_block_size=8)
+
+
+def test_block_pool_reservation_accounting():
+    pool = BlockPool(8, 4, n_slots=3, max_blocks=8)
+    assert pool.n_phys == 9 and pool.free_blocks == 8
+    assert pool.blocks_for(9) == 3
+    pool.reserve(0, 5)
+    assert pool.can_reserve(3) and not pool.can_reserve(4)
+    pool.reserve(1, 3)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.reserve(2, 1)
+    assert pool.ensure(0, 2)            # allocates on demand
+    assert not pool.ensure(0, 2)        # idempotent
+    assert pool.table[0, 0] != TRASH and pool.table[0, 1] != TRASH
+    with pytest.raises(RuntimeError, match="reserved only"):
+        pool.ensure(1, 4)               # beyond its reservation
+    pool.release(0)
+    assert pool.used_blocks == 0 and pool.can_reserve(5)
+    with pytest.raises(ValueError, match="table width"):
+        pool.reserve(2, 9)
+
+
+# ---------------------------------------------------------------------------
+# the paged decode-attention kernel
+# ---------------------------------------------------------------------------
+
+
+def _paged_fixture(seed=0, b=2, kvh=2, h=4, d=16, page=8, nb=4, n_phys=6):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, size=(n_phys, kvh, page, d)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, size=(n_phys, kvh, page, d)),
+                     jnp.int8)
+    ks = jnp.asarray(rng.random((n_phys, kvh, page)) * 0.02, jnp.float32)
+    vs = jnp.asarray(rng.random((n_phys, kvh, page)) * 0.02, jnp.float32)
+    # row 0 maps blocks [1, 3], row 1 maps [2, 4, 5]; 0 is TRASH
+    bt = jnp.asarray([[1, 3, 0, 0], [2, 4, 5, 0]], jnp.int32)
+    length = jnp.asarray([10, 20], jnp.int32)
+
+    def unpage(pool):
+        g = pool[bt]
+        if g.ndim == 5:
+            return g.transpose(0, 2, 1, 3, 4).reshape(b, kvh, nb * page, d)
+        return g.transpose(0, 2, 1, 3).reshape(b, kvh, nb * page)
+
+    return q, (kp, vp, ks, vs), bt, length, unpage
+
+
+def test_paged_kernel_matches_contiguous_kernel():
+    """Same block_s -> identical S-sweep partition -> the paged kernel's
+    output must be BITWISE the contiguous kernel's over the gathered
+    cache (the table is pure addressing)."""
+    from repro.kernels import ops as kops
+
+    q, (kp, vp, ks, vs), bt, length, unpage = _paged_fixture()
+    paged = kops.decode_attention(q, kp, vp, ks, vs, length=length,
+                                  block_tables=bt, interpret=True,
+                                  block_s=8)
+    cont = kops.decode_attention(q, unpage(kp), unpage(vp), unpage(ks),
+                                 unpage(vs), length=length,
+                                 interpret=True, block_s=8)
+    assert jnp.all(paged == cont)
+
+
+def test_paged_jnp_fallback_matches_contiguous():
+    """The gather-based jnp fallback (what CPU serving runs) is bitwise
+    the contiguous jnp int8 path."""
+    from repro.kernels import ops as kops
+
+    q, (kp, vp, ks, vs), bt, length, unpage = _paged_fixture(seed=5)
+    paged = kops.decode_attention(q, kp, vp, ks, vs, length=length,
+                                  block_tables=bt, fused_dequant="int8")
+    cont = kops.decode_attention(q, unpage(kp), unpage(vp), unpage(ks),
+                                 unpage(vs), length=length,
+                                 fused_dequant="int8")
+    assert jnp.all(paged == cont)
+
+
+def test_paged_kernel_streams_only_mapped_blocks():
+    """NaN-poison TRASH and every unmapped physical block: the output must
+    be bitwise unchanged — proof the scalar-prefetched index maps never
+    let an unmapped block reach the compute loop."""
+    from repro.kernels import ops as kops
+
+    q, (kp, vp, ks, vs), bt, length, unpage = _paged_fixture()
+    clean = kops.decode_attention(q, kp, vp, ks, vs, length=length,
+                                  block_tables=bt, interpret=True,
+                                  block_s=8)
+    poison = jnp.full(ks.shape[1:], jnp.nan, jnp.float32)
+    ks2, vs2 = ks.at[TRASH].set(poison), vs.at[TRASH].set(poison)
+    out = kops.decode_attention(q, kp, vp, ks2, vs2, length=length,
+                                block_tables=bt, interpret=True,
+                                block_s=8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert jnp.all(out == clean)
+
+
+def test_paged_requires_length():
+    from repro.kernels import ops as kops
+
+    q, (kp, vp, ks, vs), bt, _, _ = _paged_fixture()
+    with pytest.raises(ValueError, match="length"):
+        kops.decode_attention(q, kp, vp, ks, vs, block_tables=bt)
+
+
+def test_paged_block_s_tuning():
+    """The paged block_s search only offers tiles that subdivide a page."""
+    from repro.kernels import tuning
+
+    cand = tuning.best_paged_decode_attn_block(4, 8, 4, 2048, 128, 256)
+    assert 256 % cand.block_s == 0
+    again = tuning.best_paged_decode_attn_block(4, 8, 4, 2048, 128, 256)
+    assert cand is again  # cached per shape class
