@@ -41,6 +41,13 @@ trajectory is tracked PR over PR:
    the two paths pick different attention tile sizes, so equality is
    numerical, not bitwise).
 
+4. **Chunked+paged long prompts** (deterministic smoke): the same long
+   prompts through chunked+paged, chunked slot-row, and one-shot engines —
+   paging must be invisible to the chunked math (token equality off-TPU),
+   the chunked streams must match one-shot prefill on this workload, and
+   the chunk accounting and pool drain are gated too
+   (`chunked_paged_smoke_run`; gate ``serving_chunked_paged``).
+
 Usage: PYTHONPATH=src python -m benchmarks.bench_serving [--no-smoke]
 """
 
@@ -67,6 +74,11 @@ PAGED_SLOTS = 16
 N_SHORT = 24
 PAGED_BUCKET = 8
 PAGED_HORIZON = 1
+# chunked+paged scenario: long prompts fed one chunk per step over the
+# paged pool (the composition the prefix-clamped attend_chunk unlocked)
+CHUNK_PREFILL = 16
+N_LONG = 6
+LONG_PROMPT = 48
 ARRIVAL_SCALE = 1.0  # mean inter-arrival, in decode steps (Poisson process)
 # CPU wall-clock slack for the smoke gate in run.py (containers are noisy;
 # the modeled slot-step account is the deterministic gate — same convention
@@ -269,6 +281,79 @@ def paged_smoke_run(print_fn=print) -> dict:
     return r
 
 
+def chunked_paged_smoke_run(print_fn=print) -> dict:
+    """Long-prompt chunked prefill OVER the paged pool — the combination
+    the prefix-clamped `attend_chunk` lifted the engine restriction for.
+    Three real engines on the same long-prompt workload: chunked+paged,
+    chunked slot-row, and one-shot slot-row. Gates (all deterministic):
+
+    * chunked+paged outputs == chunked slot-row outputs (paging must be
+      invisible to the chunked math; off-TPU both run the identical jnp
+      chunk attention, so token equality is exact — on TPU different
+      block_s picks make it numerical, so the gate applies off-TPU only,
+      same convention as `paged_smoke_run`);
+    * chunked+paged outputs == one-shot outputs (chunk numerics track the
+      decode regime closely enough to preserve greedy streams on this
+      pinned workload);
+    * the long prompts actually went through the chunked path
+      (``prefill_chunks`` matches the ceil(L/chunk) account) and the pool
+      drained (free-on-retire).
+    """
+    import jax
+
+    from repro.launch.serve import Server
+
+    server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
+    rng = np.random.default_rng(SEED + 9)
+    prompts = [rng.integers(0, server.cfg.vocab_size,
+                            size=LONG_PROMPT).tolist()
+               for _ in range(N_LONG)]
+    gens = rng.integers(4, 9, size=N_LONG).astype(int)
+
+    def drain(engine):
+        from repro.serving import Request
+
+        states = [engine.submit(Request(prompt=tuple(p),
+                                        max_new_tokens=int(g)))
+                  for p, g in zip(prompts, gens)]
+        engine.run()
+        return [st.output() for st in states], dict(engine.stats)
+
+    kw = dict(fresh=True, n_slots=4, prefill_bucket=PAGED_BUCKET,
+              step_horizon=PAGED_HORIZON)
+    cp_eng = server.engine(prefill_chunk=CHUNK_PREFILL,
+                           kv_block_size=KV_BLOCK, **kw)
+    cp_outs, cp_stats = drain(cp_eng)
+    chunk_outs, chunk_stats = drain(
+        server.engine(prefill_chunk=CHUNK_PREFILL, **kw))
+    shot_outs, _ = drain(server.engine(**kw))
+
+    expected_chunks = N_LONG * (-(-LONG_PROMPT // CHUNK_PREFILL))
+    match_required = jax.default_backend() != "tpu"
+    r = {
+        "prefill_chunks": cp_stats["prefill_chunks"],
+        "expected_chunks": expected_chunks,
+        "paged_matches_slot_chunked": cp_outs == chunk_outs,
+        "matches_one_shot": cp_outs == shot_outs,
+        "outputs_match_required": match_required,
+        "pool_drained": cp_eng.pool.used_blocks == 0,
+        "chunked_ran": (cp_stats["prefill_chunks"] == expected_chunks
+                        and chunk_stats["prefill_chunks"]
+                        == expected_chunks),
+    }
+    ok = (r["chunked_ran"] and r["pool_drained"]
+          and ((r["paged_matches_slot_chunked"] and r["matches_one_shot"])
+               or not match_required))
+    print_fn(f"serving_chunked_paged,chunks={r['prefill_chunks']}"
+             f"/{expected_chunks},"
+             f"paged_eq_slot={r['paged_matches_slot_chunked']},"
+             f"eq_one_shot={r['matches_one_shot']},"
+             f"pool_drained={r['pool_drained']},"
+             f"{'PASS' if ok else 'FAIL'}")
+    r["ok"] = ok
+    return r
+
+
 # ---------------------------------------------------------------------------
 # 2) smoke wall-clock (tiny model, CPU-indicative)
 # ---------------------------------------------------------------------------
@@ -408,6 +493,9 @@ def run(print_fn=print, smoke: bool = True,
         results["paged_smoke_ok"] = (
             ps["concurrency_ok"]
             and (ps["outputs_match"] or not ps["outputs_match_required"]))
+        cp = chunked_paged_smoke_run(print_fn)
+        results["chunked_paged_smoke"] = cp
+        results["chunked_paged_ok"] = cp["ok"]
         s = smoke_run(print_fn)
         results["smoke"] = s
         # the headline claim, recorded in the artifact; the CI gate
@@ -433,7 +521,8 @@ def main(argv=None) -> int:
     r = run(smoke=not args.no_smoke, out_path=args.out)
     ok = (r["modeled_speedup_ok"] and r["paged_concurrency_ok"]
           and r.get("smoke_speedup_ok", True)
-          and r.get("paged_smoke_ok", True))
+          and r.get("paged_smoke_ok", True)
+          and r.get("chunked_paged_ok", True))
     return 0 if ok else 1
 
 

@@ -23,7 +23,7 @@ def decode_byte_sections(smoke: bool, section=None) -> list[str]:
     decode-attention tok/s non-regression check). Smoke-less runs write to
     a scratch dir so the tracked BENCH_*.json (which carry the smoke tok/s
     history) are never clobbered."""
-    from benchmarks import bench_decode, bench_decode_attn
+    from benchmarks import bench_decode, bench_decode_attn, bench_prefill_chunk
 
     if smoke:
         bench_dir = ""
@@ -47,6 +47,14 @@ def decode_byte_sections(smoke: bool, section=None) -> list[str]:
         failures.append("decode_attn_pallas_bytes")
     if not r.get("smoke_not_regressed", True):
         failures.append("decode_attn_smoke")
+
+    section("Chunked-prefill attention: prefix-clamped cache bytes/chunk")
+    r = bench_prefill_chunk.run(
+        smoke=smoke, out_path=f"{bench_dir}BENCH_prefill_chunk.json")
+    if not r["prefix_scaling_ok"]:
+        failures.append("prefill_chunk_bytes")
+    if not r.get("smoke_not_regressed", True):
+        failures.append("prefill_chunk_smoke")
     return failures
 
 
@@ -89,6 +97,11 @@ def serving_section(smoke: bool, section=None) -> list[str]:
     # plus bitwise outputs off-TPU), so no wall-clock slack applies
     if smoke and not r.get("paged_smoke_ok", True):
         failures.append("serving_paged_smoke")
+    # chunked prefill over the paged pool: long prompts must flow through
+    # the chunked path with outputs matching the slot-row chunked engine
+    # and the one-shot engine (deterministic token equality, off-TPU)
+    if smoke and not r.get("chunked_paged_ok", True):
+        failures.append("serving_chunked_paged")
     return failures
 
 

@@ -14,6 +14,11 @@ quantized model.
 (`repro.serving.BlockPool`): admission is then bounded by free 16-token
 blocks rather than free max_len rows, and the final report prints the
 pool accounting next to the slot stats.
+
+``--chunk N`` feeds prompts longer than N through chunked prefill (one
+N-token chunk per engine step, `kernels/chunk_attn.py`'s prefix-clamped
+attention) so a long prompt never stalls running decodes — composable
+with ``--paged`` since the paged `attend_chunk` landed.
 """
 
 import argparse
@@ -36,12 +41,17 @@ def main():
     p.add_argument("--paged", action="store_true",
                    help="paged KV: 16-token blocks, pool sized to the "
                         "slot-row byte budget")
+    p.add_argument("--chunk", type=int, default=None,
+                   help="chunked prefill: feed long prompts N tokens per "
+                        "engine step (composes with --paged)")
     args = p.parse_args()
 
     server = Server(arch=args.arch, smoke=True, w_bits=args.w_bits,
                     max_len=128)
-    paged_kw = {"kv_block_size": 16} if args.paged else {}
-    engine = server.engine(n_slots=args.slots, prefill_bucket=8, **paged_kw)
+    engine_kw = {"kv_block_size": 16} if args.paged else {}
+    if args.chunk is not None:
+        engine_kw["prefill_chunk"] = args.chunk
+    engine = server.engine(n_slots=args.slots, prefill_bucket=8, **engine_kw)
     rng = np.random.default_rng(0)
 
     states = []

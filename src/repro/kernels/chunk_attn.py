@@ -1,0 +1,410 @@
+"""Chunked-prefill flash attention over the int8 KV cache (Pallas TPU).
+
+The XLA-lowered chunked-prefill attention (`ops.chunk_attention` mode
+"naive", the pre-kernel `attend_chunk` math) dequantizes and masks the
+**entire max_len cache row per chunk**: O(S·C) work and HBM traffic for an
+O(prefix·C) problem, plus (B, C, KVH, G, S) logits/probs materialized in
+HBM. This kernel is the flash-attention form of the same math, the chunk
+(Sq = C) generalization of `decode_attn.py`'s flash-decoding kernel
+(Sq = 1): the int8 cache is streamed HBM→VMEM at most once per chunk,
+S-blocks past the chunk frontier are neither fetched nor computed, and
+nothing S-sized ever goes back to HBM.
+
+* **Grid** is (B·KVH, S/block_s): one program row per KV head, a sequential
+  sweep over S-blocks. All C·G query rows of a KV head (C chunk positions ×
+  G = H/KVH grouped heads) are batched into a single (C·G, D) MXU tile —
+  the whole chunk amortizes one cache pass, GQA without a repeated read.
+* **In-VMEM dequant / fully-integer BMMs**: identical regime to the decode
+  kernel — per-token k/v scales ride along as (1, block_s) f32 rows, q is
+  re-quantized per row to int8 once per grid row (`requant_rows`, THE
+  quantization core), QK and PV contract on the int8 MXU unit with the
+  softmax probs folded with v_scale and re-quantized per row per block.
+* **Online softmax**: running (max, sum, acc) for all C·G rows live in
+  VMEM scratch across the S sweep — the FlashAttention-2 state machine at
+  Sq = C.
+* **Prefix-clamped block skipping**: the chunk start offset is a
+  scalar-prefetch operand. The chunk occupies absolute positions
+  ``start .. start+C-1`` and its KV is written before attending, so the
+  valid prefix length is ``start + C``; S-blocks wholly past it are
+  skipped both ways — the kv index maps clamp the block index to
+  ``ceil((start+C)/block_s) - 1`` (consecutive identical indices → no
+  tail DMA) and ``pl.when`` guards the body (no tail compute). NaN poison
+  planted past the frontier provably never reaches the output
+  (tests/test_chunk_attn_kernel.py).
+* **Causal-within-chunk masking, diagonal blocks only**: query row (c, g)
+  may attend columns <= start + c. S-blocks entirely before ``start`` are
+  valid for every query row, so they take an unmasked fast path; the
+  iota/compare/select masking runs only on the **diagonal** blocks that
+  overlap ``[start, start+C)``, selected by ``pl.when``. The two branches
+  are bitwise-identical where both are legal (a mask that is all-true
+  selects the unmasked values verbatim), which is what makes the kernel
+  bitwise-equal to the XLA mirror (`ops._chunk_attn_xla`) at equal tiling.
+
+Contracts (shared by the contiguous and paged entry points)
+-----------------------------------------------------------
+
+* **Grid layout**: ``(B·KVH, S/block_s)`` — axis 0 "parallel", axis 1
+  "arbitrary" (the S sweep carries the online-softmax state in order).
+* **Scratch usage** (VMEM, live across one grid row's S sweep,
+  re-initialized under ``pl.when(si == 0)``): ``m (C·G, 1) f32`` running
+  max, ``l (C·G, 1) f32`` running sum, ``acc (C·G, D) f32`` running
+  output, and the re-quantized query ``qi (C·G, D) int8`` / ``qs (C·G, 1)
+  f32`` computed once per row (q is S-invariant).
+* **Scalar-prefetch contract**: ``start_ref (B·KVH,) int32`` — the chunk's
+  absolute start offset per grid row — drives the frontier clamp in the kv
+  index maps and the ``pl.when`` guards. The paged entry point prefetches
+  a second operand, ``bt_ref (B·max_blocks,) int32`` (flattened per-row
+  block tables), and resolves ``(row, s_block) → physical pool block``
+  inside the index maps exactly like ``decode_attention_paged_pallas`` —
+  only mapped blocks stream, the scattered pool is never gathered.
+
+Paged mode (`chunk_attention_paged_pallas`)
+-------------------------------------------
+
+The serving engine's `BlockPool` stores the cache as ``page``-token
+physical blocks with per-slot block tables. The kernel body is identical;
+only the kv/scale index maps change: clamped logical S-block ``sc`` maps
+to ``bt[row, sc // per] * KVH + head`` with ``per = page // block_s``.
+This is what lets ``Engine(prefill_chunk=..., kv_block_size=...)``
+compose: a chunked prefill can attend its already-written paged prefix
+without a contiguous copy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dist.compat import tpu_compiler_params
+from repro.kernels.ref import requant_rows
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+_CompilerParams = tpu_compiler_params()
+
+
+def _chunk_attn_kernel(
+    start_ref,  # scalar prefetch: (B*KVH,) int32 chunk start offsets
+    q_ref,  # (1, C*G, D) f32 (pre-scaled by 1/sqrt(D))
+    k_ref,  # (1, BS, D) int8
+    ks_ref,  # (1, BS) f32 per-token K scales
+    v_ref,  # (1, BS, D) int8
+    vs_ref,  # (1, BS) f32 per-token V scales
+    o_ref,  # (1, C*G, D) out dtype
+    m_ref,  # VMEM (C*G, 1) f32 running max
+    l_ref,  # VMEM (C*G, 1) f32 running sum
+    acc_ref,  # VMEM (C*G, D) f32 running output
+    qi_ref,  # VMEM (C*G, D) int8 re-quantized q (computed once per row)
+    qs_ref,  # VMEM (C*G, 1) f32 q dequant scales
+    *,
+    block_s: int,
+    s_steps: int,
+    chunk: int,
+    group: int,
+):
+    bh = pl.program_id(0)
+    si = pl.program_id(1)
+    start = start_ref[bh]
+    end = start + chunk  # valid prefix length once the chunk is written
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        q_i8, q_s = requant_rows(q_ref[0], 127.0)
+        qi_ref[...] = q_i8
+        qs_ref[...] = q_s
+
+    def _accumulate(masked: bool):
+        """One S-block's online-softmax update. ``masked`` statically picks
+        the diagonal (causal-within-chunk) branch; on blocks where the mask
+        would be all-true the two branches are bitwise identical."""
+        logits_i = jax.lax.dot_general(
+            qi_ref[...], k_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (C*G, BS)
+        logits = logits_i.astype(jnp.float32) * (qs_ref[...] * ks_ref[...])
+        if masked:
+            cols = si * block_s + jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, 1)
+            # query-row chunk position: rows are laid out c-major (C, G)
+            c_pos = jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, 0) // group
+            valid = cols <= start + c_pos
+            logits = jnp.where(valid, logits, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        if masked:
+            p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+        pv_f = p * vs_ref[...]  # (C*G, BS)
+        if masked:
+            pv_f = jnp.where(valid, pv_f, 0.0)
+        p_amax = jnp.max(jnp.abs(pv_f), axis=-1, keepdims=True)
+        p_s = jnp.maximum(p_amax, 1e-12) / 127.0
+        p_i8 = jnp.clip(jnp.round(pv_f / p_s), -127, 127).astype(jnp.int8)
+        pv_i = jax.lax.dot_general(
+            p_i8, v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (C*G, D)
+        acc_ref[...] = acc_ref[...] * alpha + pv_i.astype(jnp.float32) * p_s
+        m_ref[...] = m_new
+
+    # blocks wholly past the frontier: no compute (and, via the clamped
+    # index maps, no fetch). Of the computed blocks, only the *diagonal*
+    # ones (overlapping [start, start+C)) pay the causal mask; prefix
+    # blocks before ``start`` are valid for every query row.
+    computed = si * block_s < end
+    diagonal = (si + 1) * block_s > start
+
+    @pl.when(computed & diagonal)
+    def _diag_body():
+        _accumulate(masked=True)
+
+    @pl.when(computed & jnp.logical_not(diagonal))
+    def _prefix_body():
+        _accumulate(masked=False)
+
+    @pl.when(si == s_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _chunk_scratch(cg: int, d: int):
+    return [
+        pltpu.VMEM((cg, 1), jnp.float32),
+        pltpu.VMEM((cg, 1), jnp.float32),
+        pltpu.VMEM((cg, d), jnp.float32),
+        pltpu.VMEM((cg, d), jnp.int8),
+        pltpu.VMEM((cg, 1), jnp.float32),
+    ]
+
+
+def _fold_q(q: Array, scale: float, kvh: int) -> Array:
+    """(B, C, H, D) -> (B*KVH, C*G, D), pre-scaled, c-major row layout."""
+    b, c, h, d = q.shape
+    group = h // kvh
+    qt = (q.astype(jnp.float32) * scale).reshape(b, c, kvh, group, d)
+    return qt.transpose(0, 2, 1, 3, 4).reshape(b * kvh, c * group, d)
+
+
+def _unfold_o(out: Array, b: int, c: int, h: int, d: int, kvh: int) -> Array:
+    group = h // kvh
+    return out.reshape(b, kvh, c, group, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, c, h, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret"),
+)
+def chunk_attention_pallas(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_scale: Array,
+    v_scale: Array,
+    *,
+    start: Array,
+    scale: float,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """C-token chunk attention over the int8 cache, one clamped HBM pass.
+
+    q:        (B, C, H, D) float — the chunk's queries, at absolute
+              positions ``start .. start+C-1`` (KV already written there)
+    k_cache:  (B, KVH, S, D) int8 (attention-native layout)
+    k_scale:  (B, KVH, S) f32 per-token-per-head dequant scales
+    start:    scalar or (B,) int32 chunk start offset
+    block_s:  S-tile length; must divide S (use
+              `tuning.best_chunk_attn_block` for the roofline pick)
+
+    Returns (B, C, H, D) in q's dtype. Bitwise-identical to
+    `ops.chunk_attention(mode="xla")` at the same block_s (pinned by
+    tests/test_chunk_attn_kernel.py).
+    """
+    b, c, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+    if s_len % block_s:
+        raise ValueError(f"S={s_len} must tile by block_s={block_s}")
+    s_steps = s_len // block_s
+
+    qt = _fold_q(q, scale, kvh)
+    kt = k_cache.reshape(b * kvh, s_len, d)
+    vt = v_cache.reshape(b * kvh, s_len, d)
+    kst = k_scale.astype(jnp.float32).reshape(b * kvh, s_len)
+    vst = v_scale.astype(jnp.float32).reshape(b * kvh, s_len)
+    starts = jnp.repeat(
+        jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)), kvh)
+
+    def _clamp(si, st_ref, bh):
+        # last block covering the chunk frontier start + C; revisiting it
+        # on tail iterations keeps the mapped index constant -> no tail DMA
+        n_blocks = jax.lax.div(st_ref[bh] + c + block_s - 1, block_s)
+        return jnp.minimum(si, jnp.maximum(n_blocks - 1, 0))
+
+    def q_map(bh, si, st_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, si, st_ref):
+        return (bh, _clamp(si, st_ref, bh), 0)
+
+    def sc_map(bh, si, st_ref):
+        return (bh, _clamp(si, st_ref, bh))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvh, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, c * group, d), q_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, c * group, d), q_map),
+        scratch_shapes=_chunk_scratch(c * group, d),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _chunk_attn_kernel, block_s=block_s, s_steps=s_steps,
+            chunk=c, group=group,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, c * group, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(starts, qt, kt, kst, vt, vst)
+    return _unfold_o(out, b, c, h, d, kvh)
+
+
+def _paged_chunk_attn_kernel(start_ref, bt_ref, *refs, block_s, s_steps,
+                             chunk, group):
+    """The contiguous kernel body verbatim: the block table is consumed
+    entirely by the index maps (DMA descriptor generation on the scalar
+    core); the compute loop never sees the indirection."""
+    del bt_ref
+    _chunk_attn_kernel(start_ref, *refs, block_s=block_s, s_steps=s_steps,
+                       chunk=chunk, group=group)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_s", "interpret"),
+)
+def chunk_attention_paged_pallas(
+    q: Array,
+    k_pool: Array,
+    v_pool: Array,
+    k_scale: Array,
+    v_scale: Array,
+    block_tables: Array,
+    *,
+    start: Array,
+    scale: float,
+    block_s: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """C-token chunk attention over the *paged* int8 pool, one clamped pass.
+
+    q:            (B, C, H, D) float
+    k_pool:       (N_phys, KVH, page, D) int8 — BlockPool device arrays
+                  (one layer's slice); row 0 is the TRASH block
+    k_scale:      (N_phys, KVH, page) f32 per-token dequant scales
+    block_tables: (B, max_blocks) int32 logical→physical block map; every
+                  block covering ``start + C`` positions must be mapped
+                  (the engine pre-maps the chunk's blocks before the step)
+    start:        scalar or (B,) int32 chunk start offset
+    block_s:      S-tile length; must divide ``page`` (default: ``page``)
+
+    Returns (B, C, H, D) in q's dtype — bitwise identical to
+    `chunk_attention_pallas` over the equivalent contiguous cache **at the
+    same block_s** (pinned by tests/test_chunk_attn_kernel.py).
+    """
+    b, c, h, d = q.shape
+    n_phys, kvh, page = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    group = h // kvh
+    nb = block_tables.shape[1]
+    s_len = nb * page
+    if block_s is None:
+        block_s = page
+    if page % block_s:
+        raise ValueError(f"page={page} must tile by block_s={block_s}")
+    per = page // block_s
+    s_steps = s_len // block_s
+
+    qt = _fold_q(q, scale, kvh)
+    kt = k_pool.reshape(n_phys * kvh, page, d)
+    vt = v_pool.reshape(n_phys * kvh, page, d)
+    kst = k_scale.astype(jnp.float32).reshape(n_phys * kvh, page)
+    vst = v_scale.astype(jnp.float32).reshape(n_phys * kvh, page)
+    starts = jnp.repeat(
+        jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)), kvh)
+    bt = block_tables.astype(jnp.int32).reshape(-1)  # (B * max_blocks,)
+
+    def _clamp(si, st_ref, bh):
+        n_blocks = jax.lax.div(st_ref[bh] + c + block_s - 1, block_s)
+        return jnp.minimum(si, jnp.maximum(n_blocks - 1, 0))
+
+    def _resolve(bh, si, st_ref, bt_ref):
+        """(grid row, clamped s-block) -> (physical pool row, sub-block)."""
+        sc = _clamp(si, st_ref, bh)
+        bi = jax.lax.div(bh, kvh)
+        hi = jax.lax.rem(bh, kvh)
+        phys = bt_ref[bi * nb + jax.lax.div(sc, per)]
+        return phys * kvh + hi, jax.lax.rem(sc, per)
+
+    def q_map(bh, si, st_ref, bt_ref):
+        return (bh, 0, 0)
+
+    def kv_map(bh, si, st_ref, bt_ref):
+        row, j = _resolve(bh, si, st_ref, bt_ref)
+        return (row, j, 0)
+
+    def sc_map(bh, si, st_ref, bt_ref):
+        row, j = _resolve(bh, si, st_ref, bt_ref)
+        return (row, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * kvh, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, c * group, d), q_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+            pl.BlockSpec((1, block_s, d), kv_map),
+            pl.BlockSpec((1, block_s), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, c * group, d), q_map),
+        scratch_shapes=_chunk_scratch(c * group, d),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_chunk_attn_kernel, block_s=block_s, s_steps=s_steps,
+            chunk=c, group=group,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvh, c * group, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(starts, bt, qt, kt, kst, vt, vst)
+    return _unfold_o(out, b, c, h, d, kvh)

@@ -24,6 +24,14 @@ A/B toggles (all also take explicit keyword args that win over the env):
   "pallas" is the flash-decoding kernel over the int8 cache
   (`decode_attn.py`); it falls back to the jnp "int8" math off-TPU unless
   ``interpret`` is set.
+* ``REPRO_CHUNK_ATTN`` ∈ {"pallas" (default), "xla", "naive"} —
+  chunked-prefill attention strategy (`chunk_attention`). "pallas" is the
+  prefix-clamped flash kernel over the int8 cache (`chunk_attn.py`);
+  "xla" is the same blocked int8 math jnp-lowered with **prefix
+  bucketing** (only the first ``prefix_bucket`` cache positions are
+  sliced and streamed — O(bucket), not O(max_len), even off-TPU);
+  "naive" is the original full-S dequantize-and-mask math kept for A/B.
+  "pallas" falls back to "xla" off-TPU unless ``interpret`` is set.
 
 Block sizes: when the caller does not pin (block_m, block_n, block_k), the
 pallas paths ask `tuning.best_blocks` — a cached per-(M, K, N, w_bits)
@@ -33,6 +41,7 @@ shape-appropriate tiles instead of one hardcoded config.
 
 from __future__ import annotations
 
+import functools
 import os
 from typing import Optional
 
@@ -46,6 +55,12 @@ from repro.kernels import tuning
 from repro.kernels.abq_fused import abq_linear_fused_pallas, fits_vmem
 from repro.kernels.abq_matmul import abq_matmul_pallas
 from repro.kernels.act_quant import act_quant_pallas
+from repro.kernels.chunk_attn import (
+    _fold_q,
+    _unfold_o,
+    chunk_attention_paged_pallas,
+    chunk_attention_pallas,
+)
 from repro.kernels.decode_attn import (
     decode_attention_paged_pallas,
     decode_attention_pallas,
@@ -613,3 +628,285 @@ def decode_attention(
             vf = vf * v_scale[..., None]
         out = jnp.einsum("bkgs,bksd->bkgd", probs, vf)
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill attention
+# ---------------------------------------------------------------------------
+
+# chunked-prefill attention strategies (kept for A/B):
+#   pallas — prefix-clamped flash kernel over the int8 cache
+#            (chunk_attn.py): one HBM pass over ceil((start+C)/block_s)
+#            blocks, VMEM online softmax, int8 QK/PV MXU contractions
+#   xla    — the SAME blocked int8 math jnp-lowered (bitwise-identical to
+#            the kernel at equal tiling), with prefix bucketing: only the
+#            first ``prefix_bucket`` cache positions are sliced/streamed
+#   naive  — full-S dequantize-and-mask + plain softmax (the pre-kernel
+#            attend_chunk math; O(max_len) per chunk, the A/B baseline)
+CHUNK_ATTN_MODES = ("pallas", "xla", "naive")
+
+_NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s"))
+def _chunk_attn_xla(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_scale: Array,
+    v_scale: Array,
+    *,
+    start: Array,
+    scale: float,
+    block_s: int,
+) -> Array:
+    """XLA mirror of the chunk-attention kernel: identical blocked online-
+    softmax int8 math (same per-block op sequence, same per-row q requant,
+    same per-block prob re-quantization), an **unrolled** sweep over
+    S-blocks in place of the Pallas grid sweep — a ``lax.scan`` here would
+    break the bitwise contract (XLA's loop-body codegen fuses
+    multiply-adds differently than the straight-line graph the
+    interpreted kernel lowers to, a ~1-ulp divergence), and the block
+    count is small by construction (prefix bucketing / the roofline
+    block_s pick). Bitwise-identical to the kernel at the same
+    ``block_s`` — skipped tail blocks keep the carry unchanged via a
+    select, exactly as ``pl.when`` skips them, and the unconditional
+    causal mask matches the kernel's diagonal-only branch because a mask
+    that is all-true selects the unmasked values verbatim."""
+    b, c, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+    cg = c * group
+    rb = b * kvh
+    if s_len % block_s:
+        raise ValueError(f"S={s_len} must tile by block_s={block_s}")
+    n_steps = s_len // block_s
+
+    # the kernel's own head fold (c-major row layout, pre-scaled): sharing
+    # the helper keeps the mirror's layout glued to the kernel's — the
+    # bitwise-parity contract depends on it
+    qt = _fold_q(q, scale, kvh)
+    kt = k_cache.reshape(rb, n_steps, block_s, d).transpose(1, 0, 2, 3)
+    vt = v_cache.reshape(rb, n_steps, block_s, d).transpose(1, 0, 2, 3)
+    kst = k_scale.astype(jnp.float32).reshape(rb, n_steps, block_s) \
+        .transpose(1, 0, 2)
+    vst = v_scale.astype(jnp.float32).reshape(rb, n_steps, block_s) \
+        .transpose(1, 0, 2)
+    starts = jnp.repeat(
+        jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,)), kvh)
+    st3 = starts[:, None, None]  # (rb, 1, 1)
+    q_i8, q_s = _ref.requant_rows(qt, 127.0)  # (rb, cg, d) / (rb, cg, 1)
+
+    m = jnp.full((rb, cg, 1), _NEG_INF, jnp.float32)
+    l = jnp.zeros((rb, cg, 1), jnp.float32)
+    acc = jnp.zeros((rb, cg, d), jnp.float32)
+    for si in range(n_steps):
+        kblk, ksblk, vblk, vsblk = kt[si], kst[si], vt[si], vst[si]
+        logits_i = jax.lax.dot_general(
+            q_i8, kblk, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )  # (rb, cg, bs)
+        logits = logits_i.astype(jnp.float32) * (q_s * ksblk[:, None, :])
+        cols = si * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, 2)
+        c_pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) // group
+        valid = cols <= st3 + c_pos
+        logits = jnp.where(valid, logits, _NEG_INF)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv_f = jnp.where(valid, p * vsblk[:, None, :], 0.0)
+        p_amax = jnp.max(jnp.abs(pv_f), axis=-1, keepdims=True)
+        p_s = jnp.maximum(p_amax, 1e-12) / 127.0
+        p_i8 = jnp.clip(jnp.round(pv_f / p_s), -127, 127).astype(jnp.int8)
+        pv_i = jax.lax.dot_general(
+            p_i8, vblk, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )  # (rb, cg, d)
+        acc_new = acc * alpha + pv_i.astype(jnp.float32) * p_s
+        # blocks wholly past the chunk frontier keep the carry unchanged —
+        # the select form of the kernel's pl.when skip (bitwise no-op)
+        live = si * block_s < st3 + c
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+        acc = jnp.where(live, acc_new, acc)
+    out = (acc / jnp.maximum(l, 1e-20)).astype(q.dtype)
+    return _unfold_o(out, b, c, h, d, kvh)
+
+
+def _chunk_attn_naive(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_scale: Array,
+    v_scale: Array,
+    *,
+    start: Array,
+    scale: float,
+) -> Array:
+    """The pre-kernel attend_chunk math, kept as the A/B baseline: the
+    whole S-length cache is dequantized to f32 and masked, the (B, C, KVH,
+    G, S) logits/probs materialize — O(max_len) bytes per chunk regardless
+    of the valid prefix (what `bench_prefill_chunk` charges it for)."""
+    b, c, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, c, kvh, group, d) * scale
+    kf = k_cache.astype(jnp.float32) * k_scale[..., None].astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32) * v_scale[..., None].astype(jnp.float32)
+    logits = jnp.einsum("bckgd,bksd->bckgs", qf, kf)
+    cols = jnp.arange(s_len)
+    rows = (jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))[:, None]
+            + jnp.arange(c)[None, :])  # (B, C) absolute query positions
+    mask = cols[None, None, :] <= rows[:, :, None]  # (B, C, S)
+    logits = jnp.where(mask[:, :, None, None, :], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bckgs,bksd->bckgd", probs, vf)
+    return out.astype(q.dtype).reshape(b, c, h, d)
+
+
+def chunk_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    k_scale: Optional[Array] = None,
+    v_scale: Optional[Array] = None,
+    *,
+    start: Array,
+    scale: Optional[float] = None,
+    block_tables: Optional[Array] = None,
+    mode: Optional[str] = None,
+    backend: str = "auto",
+    interpret: bool = False,
+    block_s: Optional[int] = None,
+    prefix_bucket: Optional[int] = None,
+) -> Array:
+    """C-token chunked-prefill attention over the int8 KV cache.
+
+    q:        [B, C, H, D] — the chunk's queries, at absolute positions
+              ``start .. start+C-1``; their quantized KV must already be
+              written into the cache (attend_chunk writes before calling)
+    k_cache:  [B, KVH, S, D] int8 (attention-native layout)
+    k_scale:  [B, KVH, S] per-token-per-head dequant scales (required)
+    start:    scalar or (B,) int32 chunk start offset; the valid prefix
+              after the chunk's write is ``start + C`` and queries are
+              causal within the chunk (col <= start + row)
+
+    **Paged mode** (``block_tables`` given): the cache operands are the
+    BlockPool arrays — k/v [N_phys, KVH, page, D], scales [N_phys, KVH,
+    page] — and ``block_tables`` [B, max_blocks] int32 maps logical
+    blocks to physical pool blocks. The "pallas" mode resolves the
+    indirection inside scalar-prefetched index maps
+    (`chunk_attention_paged_pallas`) — only mapped blocks stream; the jnp
+    modes gather the mapped blocks into a contiguous view first (trimmed
+    to whole pages covering ``prefix_bucket`` when given).
+
+    Mode resolution: explicit ``mode`` wins; otherwise ``REPRO_CHUNK_ATTN``
+    picks one of ``CHUNK_ATTN_MODES`` ("pallas" default); anything else
+    raises. "pallas" streams only the ``ceil((start+C)/block_s)`` S-blocks
+    covering the valid prefix (scalar-prefetched clamp — the masked tail
+    is neither fetched nor computed) and falls back to "xla" off-TPU
+    unless ``interpret``. "xla" is the same blocked math jnp-lowered —
+    bitwise-identical to the kernel at equal ``block_s`` — and applies
+    **prefix bucketing**: with ``prefix_bucket`` (a static bound >=
+    start+C, e.g. the engine's power-of-two rounding of the chunk
+    frontier) only the first ``prefix_bucket`` cache positions are sliced
+    and streamed, so the off-TPU cost is O(bucket), not O(max_len).
+    Skipped/tail blocks are select-discarded, so bucketing never changes
+    the result. "naive" is the original full-S dequantize-and-mask math.
+
+    ``block_s`` defaults to `tuning.best_chunk_attn_block`'s roofline pick
+    (page-divisor-restricted in paged mode). Returns [B, C, H, D] in q's
+    dtype.
+    """
+    if mode is None:
+        mode = os.environ.get("REPRO_CHUNK_ATTN", "pallas")
+    if mode not in CHUNK_ATTN_MODES:
+        raise ValueError(
+            f"chunk_attention mode {mode!r} not in {CHUNK_ATTN_MODES} "
+            "(check REPRO_CHUNK_ATTN)")
+    if k_cache.dtype != jnp.int8 or k_scale is None or v_scale is None:
+        missing = "k_scale" if k_scale is None else "v_scale"
+        raise ValueError(
+            "chunk_attention: an int8 KV cache with per-token scales is "
+            f"required ({missing} is None or cache is not int8) — the "
+            "chunked-prefill path always attends the quantized prefix")
+    b, c, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    if prefix_bucket is not None and not isinstance(start, jax.core.Tracer):
+        # a bucket below the chunk frontier would silently drop attended
+        # prefix positions; catch it whenever ``start`` is concrete (the
+        # engine passes a traced start but upholds the bound by
+        # construction — see Engine._prefix_bucket)
+        start_c = int(jnp.max(jnp.asarray(start)))
+        if start_c + c > prefix_bucket:
+            raise ValueError(
+                f"chunk_attention: prefix_bucket={prefix_bucket} is below "
+                f"the chunk frontier start+C={start_c + c} — the bucket "
+                "must cover every position the chunk attends")
+
+    if block_tables is not None:
+        page = k_cache.shape[2]
+        kvh = k_cache.shape[1]
+        s_log = block_tables.shape[1] * page
+        if mode == "pallas" and (_resolve(backend) == "pallas" or interpret):
+            if block_s is None:
+                block_s = tuning.best_chunk_attn_block(
+                    b, kvh, h // kvh, c, s_log, d, page=page).block_s
+            return chunk_attention_paged_pallas(
+                q, k_cache, v_cache, k_scale, v_scale, block_tables,
+                start=start, scale=scale, block_s=block_s,
+                interpret=interpret)
+        # jnp fallback: gather the mapped blocks into a contiguous view —
+        # trimmed to the whole pages covering the prefix bucket, so the
+        # gather itself is O(bucket) too
+        nb = block_tables.shape[1]
+        if prefix_bucket is not None and mode != "naive":
+            nb = min(nb, -(-min(prefix_bucket, s_log) // page))
+        bt = block_tables[:, :nb]
+
+        def unpage(pool):
+            g = pool[bt]
+            if g.ndim == 5:
+                return g.transpose(0, 2, 1, 3, 4).reshape(
+                    g.shape[0], g.shape[2], -1, g.shape[4])
+            return g.transpose(0, 2, 1, 3).reshape(
+                g.shape[0], g.shape[2], -1)
+
+        k_cache, v_cache = unpage(k_cache), unpage(v_cache)
+        k_scale, v_scale = unpage(k_scale), unpage(v_scale)
+
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    group = h // kvh
+
+    if mode == "pallas":
+        if _resolve(backend) == "pallas" or interpret:
+            if block_s is None:
+                block_s = tuning.best_chunk_attn_block(
+                    b, kvh, group, c, s_len, d).block_s
+            return chunk_attention_pallas(
+                q, k_cache, v_cache, k_scale, v_scale,
+                start=start, scale=scale, block_s=block_s,
+                interpret=interpret)
+        mode = "xla"
+
+    if mode == "xla":
+        if prefix_bucket is not None and prefix_bucket < s_len:
+            pb = max(int(prefix_bucket), 1)
+            k_cache = k_cache[:, :, :pb]
+            v_cache = v_cache[:, :, :pb]
+            k_scale = k_scale[:, :, :pb]
+            v_scale = v_scale[:, :, :pb]
+            s_len = pb
+        if block_s is None:
+            block_s = tuning.best_chunk_attn_block(
+                b, kvh, group, c, s_len, d).block_s
+        return _chunk_attn_xla(q, k_cache, v_cache, k_scale, v_scale,
+                               start=start, scale=scale, block_s=block_s)
+
+    return _chunk_attn_naive(q, k_cache, v_cache, k_scale, v_scale,
+                             start=start, scale=scale)

@@ -25,6 +25,9 @@ caller does not pin blocks explicitly. `benchmarks/bench_kernel_ablation.py`
 (`kernels/decode_attn.py`): a per-(B, KVH, G, S, D) cached block-S pick
 ranked by the cache-bytes roofline (`decode_attn_cost`), balancing tail-byte
 waste at short valid prefixes against per-grid-step overhead at long S.
+``best_chunk_attn_block`` extends it to the chunked-prefill kernel
+(`kernels/chunk_attn.py`): same search, cost charged over representative
+chunk offsets, candidates restricted to page divisors in paged mode.
 """
 
 from __future__ import annotations
@@ -226,6 +229,112 @@ def best_decode_attn_block(
     if measure is None:
         return _best_decode_attn_block_modeled(batch, kvh, group, s, d)
     return _search_decode_attn_block(batch, kvh, group, s, d, measure)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill attention shape class (block-S for kernels/chunk_attn.py)
+# ---------------------------------------------------------------------------
+
+
+def chunk_attn_cost(batch: int, kvh: int, group: int, chunk: int, s: int,
+                    d: int, *, block_s: int, start: int = 0) -> dict:
+    """Roofline cost of one C-token chunk-attention call at one S-tile size.
+
+    The chunk attends the prefix ``[0, start + chunk)``; the kernel fetches
+    whole S-blocks, so the streamed cache is ``ceil((start+chunk)/block_s)
+    * block_s`` positions — O(prefix), not O(S). The naive XLA path this
+    replaces streams (and dequantizes) all ``s`` positions regardless of
+    ``start``; `benchmarks/bench_prefill_chunk.py` gates that gap. Every
+    grid step (skipped or not) pays GRID_STEP_US, same as the decode
+    search — what keeps the pick off degenerate tiny tiles at long S.
+    """
+    rows = batch * kvh
+    end = min(start + chunk, s)
+    fetched = (max(end, 1) + block_s - 1) // block_s * block_s
+    fetched = min(fetched, s)
+    pos_bytes = 2 * d + 2 * 4  # int8 k + int8 v + f32 k/v scales per position
+    cache_bytes = rows * fetched * pos_bytes
+    qo_bytes = rows * chunk * group * d * (4 + 4)  # q read + out write, f32
+    total_bytes = cache_bytes + qo_bytes
+    ops = 2.0 * rows * fetched * chunk * group * d * 2  # QK + PV int8 BMMs
+    t_mem = total_bytes / HBM_BW
+    t_cmp = ops / INT8_PEAK
+    t_grid = rows * (s // block_s) * GRID_STEP_US * 1e-6
+    t = max(t_mem, t_cmp) + t_grid
+    # double-buffered k/v tiles + scale rows, plus the resident (C·G)-row
+    # q/acc/m/l state (q both f32-in and int8 re-quantized)
+    vmem = (2 * (2 * block_s * d + 2 * 4 * block_s)
+            + chunk * group * (d * (4 + 4 + 1) + 3 * 4))
+    return {"t_us": t * 1e6, "cache_bytes": cache_bytes, "vmem": vmem}
+
+
+def _search_chunk_attn_block(
+    batch: int, kvh: int, group: int, chunk: int, s: int, d: int,
+    page: Optional[int] = None,
+    measure: Optional[Callable[[int], float]] = None,
+) -> DecodeAttnCandidate:
+    """block_s search for the chunk-attention kernel.
+
+    Candidates are the kernel-legal tiles: divisors of ``s`` from the
+    shared candidate set (contiguous mode), or divisors of ``page`` plus
+    the page itself (paged mode — a tile spanning two logical pages would
+    straddle two discontiguous physical blocks, same restriction as
+    `best_paged_decode_attn_block`). The roofline cost is averaged over
+    representative chunk offsets (start 0, S/2, S-C) so the pick balances
+    short-prefix tail waste against long-prefix grid overhead. A
+    ``measure`` callable (block_s -> time) replaces the modeled ranking;
+    legality filtering stays model-side either way.
+    """
+    if page is None:
+        cands = sorted({c for c in _BS_CANDIDATES
+                        if c <= s and s % c == 0} | {s})
+    else:
+        cands = sorted({c for c in _BS_CANDIDATES
+                        if c <= page and page % c == 0} | {page})
+    best: Optional[DecodeAttnCandidate] = None
+    starts = sorted({0, max(s // 2, 0), max(s - chunk, 0)})
+    for bs in cands:
+        rs = [chunk_attn_cost(batch, kvh, group, chunk, s, d, block_s=bs,
+                              start=st) for st in starts]
+        if rs[0]["vmem"] > VMEM_BYTES // 4:
+            continue
+        t = measure(bs) if measure is not None \
+            else sum(r["t_us"] for r in rs) / len(rs)
+        # starts is sorted ascending: rs[-1] is the longest-prefix cost
+        cand = DecodeAttnCandidate(bs, t, rs[-1]["cache_bytes"],
+                                   rs[0]["vmem"])
+        if best is None or cand.t_us < best.t_us:
+            best = cand
+    if best is None:
+        raise ValueError(
+            f"no feasible chunk-attn block for (B={batch},KVH={kvh},"
+            f"G={group},C={chunk},S={s},D={d},page={page})")
+    return best
+
+
+_best_chunk_attn_block_modeled = functools.lru_cache(maxsize=4096)(
+    _search_chunk_attn_block)
+
+
+def best_chunk_attn_block(
+    batch: int, kvh: int, group: int, chunk: int, s: int, d: int, *,
+    page: Optional[int] = None,
+    measure: Optional[Callable[[int], float]] = None,
+) -> DecodeAttnCandidate:
+    """block_s pick for one chunk-attention shape class.
+
+    ``measure=None`` (the dispatch default, what `ops.chunk_attention`
+    uses) ranks with the cache-bytes roofline and is cached per shape
+    class; pass ``measure`` (block_s -> wall-clock) on real TPU for
+    empirical ranking (`auto_tune` parity; measured searches are not
+    cached). ``page`` restricts candidates to divisors of the paged
+    pool's page size (the paged kernel's legality rule).
+    """
+    if measure is None:
+        return _best_chunk_attn_block_modeled(batch, kvh, group, chunk, s,
+                                              d, page)
+    return _search_chunk_attn_block(batch, kvh, group, chunk, s, d, page,
+                                    measure)
 
 
 @functools.lru_cache(maxsize=4096)

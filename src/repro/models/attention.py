@@ -277,6 +277,8 @@ def attend_chunk(
     start: Array,
     cfg: ArchConfig,
     *,
+    block_tables: Optional[Array] = None,
+    prefix_bucket: Optional[int] = None,
     backend: str = "auto",
     interpret: bool = False,
     shard=None,
@@ -289,15 +291,26 @@ def attend_chunk(
 
     The chunk's K/V are quantized and written into the cache first, then the
     chunk queries attend over the int8 cache with a causal-within-chunk mask
-    (col <= start + row). Unlike full prefill (which attends in bf16 and
-    quantizes after), the chunk attends over the already-quantized prefix —
-    that is the price of resuming a prefill mid-prompt; numerics match the
-    decode path, not the one-shot prefill path. XLA-lowered (C is small and
-    the op runs once per admitted chunk, off the decode hot loop). Note the
-    cost is O(S = max_len) per chunk — the whole cache row is dequantized
-    and masked, not just the valid prefix (``start`` is traced, so a
-    prefix-only slice would need bucketed specializations; deferred, see
-    ROADMAP).
+    (col <= start + row) via `kops.chunk_attention`. Unlike full prefill
+    (which attends in bf16 and quantizes after), the chunk attends over the
+    already-quantized prefix — that is the price of resuming a prefill
+    mid-prompt; numerics match the decode path, not the one-shot prefill
+    path. The attention cost is O(prefix), not O(S = max_len): on TPU the
+    prefix-clamped Pallas kernel (`kernels/chunk_attn.py`) fetches and
+    computes only the ``ceil((start+C)/block_s)`` S-blocks covering the
+    valid prefix (scalar-prefetched ``start`` clamps the index maps), and
+    off-TPU the XLA fallback slices the cache to the static
+    ``prefix_bucket`` (the engine passes its power-of-two rounding of
+    ``start + C``) — O(bucket) even without a kernel.
+
+    ``block_tables`` ((B, max_blocks) int32) switches to the **paged**
+    cache: layer_cache leaves are BlockPool arrays ((N_phys, KVH, page, D)
+    values / (N_phys, KVH, page) scales) and the chunk's KV write resolves
+    every position ``start+t`` through the table — logical block
+    ``(start+t) // page`` → physical pool block — as one advanced-index
+    scatter. The engine pre-maps every block covering ``start + C`` before
+    the compiled step runs, so the scatter never lands in TRASH and the
+    kernel's index maps only meet mapped blocks.
 
     Returns (out (B, C, D'), updated layer_cache).
     """
@@ -311,9 +324,24 @@ def attend_chunk(
     )
     kq, ks, vq, vs = quantize_kv_cached(k, v)  # (B,KVH,C,D) / (B,KVH,C)
 
-    def write(cache, val, axis):
-        return jax.lax.dynamic_update_slice_in_dim(cache, val, start,
-                                                   axis=axis)
+    if block_tables is not None:
+        # paged write: scatter the whole chunk into its mapped pool blocks
+        # (advanced-index scatter over (phys, kvh, offset) per token)
+        page = layer_cache["k"].shape[2]
+        pos_t = (start + jnp.arange(c)).astype(jnp.int32)  # (C,)
+        phys = jnp.take(block_tables.astype(jnp.int32), pos_t // page,
+                        axis=1)  # (B, C)
+        i0 = phys[:, None, :]  # (B, 1, C)
+        i1 = jnp.arange(layer_cache["k"].shape[1])[None, :, None]  # (1,KVH,1)
+        i2 = (pos_t % page)[None, None, :]  # (1, 1, C)
+
+        def write(cache, val, axis):
+            del axis
+            return cache.at[i0, i1, i2].set(val.astype(cache.dtype))
+    else:
+        def write(cache, val, axis):
+            return jax.lax.dynamic_update_slice_in_dim(cache, val, start,
+                                                       axis=axis)
 
     new_cache = {
         "k": write(layer_cache["k"], kq, 2),
@@ -323,21 +351,18 @@ def attend_chunk(
         "v_scale": write(layer_cache["v_scale"],
                          vs.astype(layer_cache["v_scale"].dtype), 2),
     }
-    s_len = new_cache["k"].shape[2]
-    kvh = cfg.n_kv_heads
-    group = cfg.n_heads // kvh
-    qf = q.astype(jnp.float32).reshape(b, c, kvh, group, hd) * (hd**-0.5)
-    kf = (new_cache["k"].astype(jnp.float32)
-          * new_cache["k_scale"][..., None].astype(jnp.float32))
-    vf = (new_cache["v"].astype(jnp.float32)
-          * new_cache["v_scale"][..., None].astype(jnp.float32))
-    logits = jnp.einsum("bckgd,bksd->bckgs", qf, kf)
-    cols = jnp.arange(s_len)
-    rows = start + jnp.arange(c)
-    mask = cols[None, :] <= rows[:, None]  # (C, S) causal at offset
-    logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bckgs,bksd->bckgd", probs, vf)
+    out = kops.chunk_attention(
+        q,
+        new_cache["k"],
+        new_cache["v"],
+        new_cache["k_scale"],
+        new_cache["v_scale"],
+        start=start,
+        block_tables=block_tables,
+        prefix_bucket=prefix_bucket,
+        backend=backend,
+        interpret=interpret,
+    )
     out = out.astype(x.dtype).reshape(b, c, cfg.n_heads * hd)
     out = apply_linear(out, params["wo"], backend=backend, interpret=interpret)
     return out, new_cache

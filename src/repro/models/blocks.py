@@ -275,14 +275,19 @@ def dense_block_decode(params: dict, x: Array, layer_cache: dict, pos: Array,
 
 
 def dense_block_chunk(params: dict, x: Array, layer_cache: dict, start: Array,
-                      ctx: ModelContext):
+                      ctx: ModelContext, *, block_tables=None,
+                      prefix_bucket=None):
     """Chunked-prefill block step: C tokens against the quantized cache
     (see `attention.attend_chunk`). Same residual structure as
-    `dense_block_decode`, multi-token."""
+    `dense_block_decode`, multi-token. ``block_tables`` routes the cache
+    through the paged BlockPool indirection; ``prefix_bucket`` is the
+    static prefix bound the XLA fallback slices to."""
     cfg = ctx.cfg
     h = rms_norm(x, params["attn_norm"], cfg.norm_eps)
     a, new_cache = attn_mod.attend_chunk(
-        params["attn"], h, layer_cache, start, cfg, shard=ctx.shard, **ctx.kw
+        params["attn"], h, layer_cache, start, cfg,
+        block_tables=block_tables, prefix_bucket=prefix_bucket,
+        shard=ctx.shard, **ctx.kw
     )
     x = x + a
     h = rms_norm(x, params["mlp_norm"], cfg.norm_eps)

@@ -831,17 +831,26 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
 
 def prefill_chunk(params, attn_cache: dict, tokens: Array, start: Array,
                   cfg: ArchConfig, ctx: ModelContext, *,
-                  last_pos: Optional[Array] = None):
+                  last_pos: Optional[Array] = None,
+                  block_tables: Optional[Array] = None,
+                  prefix_bucket: Optional[int] = None):
     """Advance one slot's prefill by a chunk of C prompt tokens.
 
     attn_cache: a single-row attention cache (leaves (L, 1, KVH, S, D) /
-    (L, 1, KVH, S)); tokens: (1, C) at absolute positions ``start ..
-    start+C-1``. Each layer writes the chunk's quantized KV and attends it
-    against the int8 prefix (see `attention.attend_chunk`). With
-    ``last_pos`` (chunk-local index of the prompt's final token) the
-    first-token logits are returned; mid-prompt chunks pass None and get
-    logits=None. dense/moe families only — SSM state carries can't resume
-    from a written cache row.
+    (L, 1, KVH, S)) — or, with ``block_tables`` ((1, max_blocks) int32),
+    the paged BlockPool arrays (leaves (L, N_phys, KVH, page, D) /
+    (L, N_phys, KVH, page)) shared by every slot, with the chunk's writes
+    and reads resolved through the table (see `attention.attend_chunk`;
+    the engine pre-maps every block covering ``start + C``). tokens:
+    (1, C) at absolute positions ``start .. start+C-1``. Each layer
+    writes the chunk's quantized KV and attends it against the int8
+    prefix — the prefix-clamped Pallas kernel on TPU, the
+    ``prefix_bucket``-sliced XLA fallback elsewhere (the bucket is a
+    static bound >= start+C, so the per-chunk cost is O(prefix bucket),
+    not O(max_len)). With ``last_pos`` (chunk-local index of the prompt's
+    final token) the first-token logits are returned; mid-prompt chunks
+    pass None and get logits=None. dense/moe families only — SSM state
+    carries can't resume from a written cache row.
     """
     if cfg.family not in ("dense", "moe"):
         raise NotImplementedError(
@@ -851,7 +860,9 @@ def prefill_chunk(params, attn_cache: dict, tokens: Array, start: Array,
     def body(carry, xs):
         x = carry
         lp, lc = xs
-        x, nc = B.dense_block_chunk(lp, x, lc, start, ctx)
+        x, nc = B.dense_block_chunk(lp, x, lc, start, ctx,
+                                    block_tables=block_tables,
+                                    prefix_bucket=prefix_bucket)
         return x, nc
 
     h, updated = jax.lax.scan(body, h, (params["blocks"], attn_cache),

@@ -57,7 +57,13 @@ step are batched into ONE compiled prefill+install call. With
 engine step (`lm.prefill_chunk`), so a long prompt never stalls running
 decodes for more than a chunk's worth of work; chunked rows attend over
 their own already-quantized prefix — decode numerics, not one-shot-prefill
-numerics.
+numerics. Each chunk's attention cost is O(prefix), not O(max_len): the
+prefix-clamped Pallas kernel (`kernels/chunk_attn.py`) skips S-blocks past
+the chunk frontier on TPU, and off-TPU the XLA fallback slices the cache
+to a static power-of-two **prefix bucket** (at most log2(max_len) jit
+specializations, see `_prefix_bucket`). Chunked prefill composes with
+paged KV: the chunk's blocks are pre-mapped before the compiled call and
+its writes/reads resolve through the slot's block table.
 
 Paged KV allocation (``kv_block_size``)
 ---------------------------------------
@@ -91,6 +97,7 @@ overcommit arrives with preemption/swapping (ROADMAP).
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Optional, Sequence, Union
 
@@ -99,6 +106,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
+from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.blocks import ModelContext
 from repro.serving.paged import BlockPool, init_paged_cache
@@ -153,11 +161,6 @@ class Engine:
                 raise NotImplementedError(
                     "paged KV needs a pos-indexed pure-attention cache "
                     f"(dense/moe), got {cfg.family!r}")
-            if prefill_chunk is not None:
-                raise NotImplementedError(
-                    "chunked prefill over the paged pool is not implemented "
-                    "(attend_chunk reads contiguous rows); use one or the "
-                    "other")
             if max_len % kv_block_size:
                 raise ValueError(
                     f"max_len ({max_len}) must be a multiple of "
@@ -212,8 +215,13 @@ class Engine:
         # sampler out of the hot loop (greedy tokens are flag-invariant)
         self._step_fn = jax.jit(self._raw_step, static_argnums=(11,))
         self._admit_fns: dict[tuple[int, int, bool], callable] = {}
-        self._chunk_mid_fn = None
-        self._chunk_last_fn = None
+        # chunk processors, compiled once per (REPRO_CHUNK_ATTN mode,
+        # prefix bucket) — the mode is read at trace time inside the
+        # jitted fns, so an A/B flip on a live engine must not reuse a
+        # function traced under the previous mode; the bucket is the
+        # static power-of-two bound the XLA fallback slices the cache to
+        # (at most log2(max_len) specializations per mode)
+        self._chunk_fn_cache: dict[tuple[str, int], tuple] = {}
 
     def _push_rows(self) -> None:
         """Refresh the device copies of the per-row vectors from the host
@@ -343,44 +351,101 @@ class Engine:
             self._admit_fns[(padded_len, k, sample)] = jax.jit(f)
         return self._admit_fns[(padded_len, k, sample)]
 
-    def _chunk_fns(self):
-        """(mid, last) chunk processors, compiled once per engine."""
-        if self._chunk_mid_fn is None:
-            def row_of(cache, slot):
-                return jax.tree.map(
-                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
-                    cache["attn"])
+    def _prefix_bucket(self, end: int) -> int:
+        """Static prefix bound for one chunk call: ``end = start + C``
+        rounded up to a power of two (at most log2(max_len) jit
+        specializations per chunk shape), then to whole KV blocks in
+        paged mode (the gather fallback trims to whole pages), capped at
+        max_len. The XLA chunk-attention fallback slices the cache to
+        this, so the off-TPU per-chunk cost is O(bucket), not O(max_len).
+        The Pallas kernel ignores it (its clamp is the scalar-prefetched
+        ``start`` itself) — so when the chunk attention will lower to the
+        kernel, everything collapses to ONE bucket (max_len): bucketed
+        specializations would only buy redundant whole-model recompiles
+        there. The kernel-vs-fallback call mirrors `ops.chunk_attention`'s
+        own dispatch — the ctx's explicit backend/interpret win over the
+        env default, exactly as they do at the call site."""
+        mode = os.environ.get("REPRO_CHUNK_ATTN", "pallas")
+        backend = self.ctx.backend
+        resolved = kops.default_backend() if backend == "auto" else backend
+        if mode == "pallas" and (resolved == "pallas" or self.ctx.interpret):
+            return self.max_len
+        b = 1
+        while b < end:
+            b <<= 1
+        if self.pool is not None:
+            bs = self.pool.block_size
+            b = -(-b // bs) * bs
+        return min(b, self.max_len)
 
-            def insert(cache, row, slot):
-                def one(p, r):
-                    start = (0, slot) + (0,) * (p.ndim - 2)
-                    return jax.lax.dynamic_update_slice(
-                        p, r.astype(p.dtype), start)
+    def _chunk_fns(self, bucket: int):
+        """(mid, last) chunk processors, compiled once per (engine,
+        REPRO_CHUNK_ATTN mode, prefix bucket). Slot-row mode slices the
+        slot's cache row in/out; paged mode passes the pool leaves whole
+        plus the slot's block-table row (the chunk's writes and reads
+        resolve through it)."""
+        key = (os.environ.get("REPRO_CHUNK_ATTN", "pallas"), bucket)
+        if key not in self._chunk_fn_cache:
+            if self.pool is None:
+                def row_of(cache, slot):
+                    return jax.tree.map(
+                        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1,
+                                                               axis=1),
+                        cache["attn"])
 
-                return {"attn": jax.tree.map(one, cache["attn"], row)}
+                def insert(cache, row, slot):
+                    def one(p, r):
+                        start = (0, slot) + (0,) * (p.ndim - 2)
+                        return jax.lax.dynamic_update_slice(
+                            p, r.astype(p.dtype), start)
 
-            def mid(cache, toks, start, slot):
-                row = row_of(cache, slot)
-                _, row = lm.prefill_chunk(self.params, row, toks, start,
-                                          self.cfg, self.ctx)
-                return insert(cache, row, slot)
+                    return {"attn": jax.tree.map(one, cache["attn"], row)}
 
-            def last(cache, tok, toks, start, slot, last_pos, seed, temp,
-                     top_k, top_p, greedy):
-                row = row_of(cache, slot)
-                logits, row = lm.prefill_chunk(self.params, row, toks, start,
-                                               self.cfg, self.ctx,
-                                               last_pos=last_pos)
-                new_cache = insert(cache, row, slot)
-                first = self._first_tokens(
-                    logits, seed[None], temp[None], top_k[None], top_p[None],
-                    greedy[None], True)
-                tok = jax.lax.dynamic_update_slice(tok, first, (slot, 0))
-                return tok, new_cache
+                def mid(cache, toks, start, slot):
+                    row = row_of(cache, slot)
+                    _, row = lm.prefill_chunk(self.params, row, toks, start,
+                                              self.cfg, self.ctx,
+                                              prefix_bucket=bucket)
+                    return insert(cache, row, slot)
 
-            self._chunk_mid_fn = jax.jit(mid)
-            self._chunk_last_fn = jax.jit(last)
-        return self._chunk_mid_fn, self._chunk_last_fn
+                def last(cache, tok, toks, start, slot, last_pos, seed, temp,
+                         top_k, top_p, greedy):
+                    row = row_of(cache, slot)
+                    logits, row = lm.prefill_chunk(self.params, row, toks,
+                                                   start, self.cfg, self.ctx,
+                                                   last_pos=last_pos,
+                                                   prefix_bucket=bucket)
+                    new_cache = insert(cache, row, slot)
+                    first = self._first_tokens(
+                        logits, seed[None], temp[None], top_k[None],
+                        top_p[None], greedy[None], True)
+                    tok = jax.lax.dynamic_update_slice(tok, first, (slot, 0))
+                    return tok, new_cache
+            else:
+                def mid(cache, toks, start, bt):
+                    _, attn = lm.prefill_chunk(self.params, cache["attn"],
+                                               toks, start, self.cfg,
+                                               self.ctx, block_tables=bt,
+                                               prefix_bucket=bucket)
+                    return {"attn": attn}
+
+                def last(cache, tok, toks, start, slot, bt, last_pos, seed,
+                         temp, top_k, top_p, greedy):
+                    logits, attn = lm.prefill_chunk(self.params,
+                                                    cache["attn"], toks,
+                                                    start, self.cfg, self.ctx,
+                                                    last_pos=last_pos,
+                                                    block_tables=bt,
+                                                    prefix_bucket=bucket)
+                    new_cache = {"attn": attn}
+                    first = self._first_tokens(
+                        logits, seed[None], temp[None], top_k[None],
+                        top_p[None], greedy[None], True)
+                    tok = jax.lax.dynamic_update_slice(tok, first, (slot, 0))
+                    return tok, new_cache
+
+            self._chunk_fn_cache[key] = (jax.jit(mid), jax.jit(last))
+        return self._chunk_fn_cache[key]
 
     # ------------------------------------------------------------------
     # submission
@@ -614,26 +679,51 @@ class Engine:
         end = min(start + chunk, L)
         toks = np.zeros((1, chunk), np.int32)
         toks[0, : end - start] = st.request.prompt[start:end]
-        mid, last = self._chunk_fns()
+        # the chunk writes its full (padded) width: positions
+        # start .. start+chunk-1 — the static prefix bucket bounds that
+        bucket = self._prefix_bucket(start + chunk)
+        mid, last = self._chunk_fns(bucket)
+        bt = None
+        if self.pool is not None:
+            # pre-map every block the chunk's writes (and the kernel's
+            # clamped reads) can touch before the compiled call — within
+            # the admission reservation, so this can never fail
+            bs = self.pool.block_size
+            if self.pool.ensure(slot, -(-(start + chunk) // bs)):
+                self._dirty = True
+            bt = jnp.asarray(self.pool.table[slot:slot + 1])
         self.stats["prefill_chunks"] += 1
         if end < L:
-            self.cache = mid(self.cache, jnp.asarray(toks), np.int32(start),
-                             np.int32(slot))
+            if self.pool is None:
+                self.cache = mid(self.cache, jnp.asarray(toks),
+                                 np.int32(start), np.int32(slot))
+            else:
+                self.cache = mid(self.cache, jnp.asarray(toks),
+                                 np.int32(start), bt)
             st.prefill_pos = end
             # track the prefill frontier: the row is frozen for decode, but
             # the compiled step still executes its KV write — at `pos`. By
             # keeping pos at the frontier, that garbage write lands in the
             # NEXT chunk's span and is overwritten before it can ever be
             # attended (a stale pos would let it land inside the prefix a
-            # previous chunk already wrote)
+            # previous chunk already wrote; in paged mode an unmapped
+            # frontier block sends it to TRASH, a mapped one is overwritten
+            # by the next chunk the same way)
             self._pos[slot] = end
             self._dirty = True
         else:
-            self._tok, self.cache = last(
-                self.cache, self._tok, jnp.asarray(toks), np.int32(start),
-                np.int32(slot), np.int32(L - 1 - start),
-                self._seed[slot], self._temp[slot], self._top_k[slot],
-                self._top_p[slot], self._greedy[slot])
+            if self.pool is None:
+                self._tok, self.cache = last(
+                    self.cache, self._tok, jnp.asarray(toks), np.int32(start),
+                    np.int32(slot), np.int32(L - 1 - start),
+                    self._seed[slot], self._temp[slot], self._top_k[slot],
+                    self._top_p[slot], self._greedy[slot])
+            else:
+                self._tok, self.cache = last(
+                    self.cache, self._tok, jnp.asarray(toks), np.int32(start),
+                    np.int32(slot), bt, np.int32(L - 1 - start),
+                    self._seed[slot], self._temp[slot], self._top_k[slot],
+                    self._top_p[slot], self._greedy[slot])
             st.prefill_pos = L
             self._start_running(slot, st, L)
 
