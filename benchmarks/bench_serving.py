@@ -48,6 +48,15 @@ trajectory is tracked PR over PR:
    the chunk accounting and pool drain are gated too
    (`chunked_paged_smoke_run`; gate ``serving_chunked_paged``).
 
+5. **Metrics overhead + snapshot schema** (runs even with ``--no-smoke``,
+   so ``run.py --check`` gates it): the same workload through a
+   metrics-on and a metrics-off engine. Outputs must be bitwise identical
+   (telemetry is a host-side observer — it must never perturb the device
+   computation), the metrics-on min-of-N drain must stay within
+   ``METRICS_OVERHEAD_TOL`` of metrics-off, and the snapshot must satisfy
+   `repro.serving.metrics.check_snapshot` (stable operator-facing schema).
+   Gates: ``serving_metrics_overhead``, ``serving_metrics_schema``.
+
 Usage: PYTHONPATH=src python -m benchmarks.bench_serving [--no-smoke]
 """
 
@@ -84,6 +93,11 @@ ARRIVAL_SCALE = 1.0  # mean inter-arrival, in decode steps (Poisson process)
 # the modeled slot-step account is the deterministic gate — same convention
 # as bench_decode_attn's SMOKE_SLACK)
 SMOKE_SLACK = 0.6
+# telemetry must be ~free: metrics-on min-of-N wall-clock within 5% of
+# metrics-off (min-of-N because container noise is one-sided — slowdowns,
+# never speedups)
+METRICS_OVERHEAD_TOL = 0.05
+METRICS_REPS = 3
 
 
 def make_workload(seed: int = SEED, n: int = N_REQ):
@@ -239,12 +253,12 @@ def paged_smoke_run(print_fn=print) -> dict:
     def drain(engine):
         from repro.serving import Request
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         states = [engine.submit(Request(prompt=tuple(p),
                                         max_new_tokens=int(g)))
                   for p, g in zip(prompts, gens)]
         engine.run()
-        wall = max(time.time() - t0, 1e-9)
+        wall = max(time.perf_counter() - t0, 1e-9)
         outs = [st.output() for st in states]
         return {
             "peak_running": engine.stats["peak_running"],
@@ -355,34 +369,110 @@ def chunked_paged_smoke_run(print_fn=print) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 1c) telemetry: zero-interference + overhead + snapshot schema
+# ---------------------------------------------------------------------------
+
+
+def metrics_overhead_run(print_fn=print, reps: int = METRICS_REPS) -> dict:
+    """Telemetry must be free: the same short workload through a
+    metrics-on and a metrics-off engine (same quantized model, paged pool,
+    chunked prefill — the fully-loaded configuration, so every hook fires).
+
+    Gated here, and by ``run.py --check`` (this section runs even with
+    ``--no-smoke``):
+
+    * **bitwise outputs** (deterministic): the metrics facade is a
+      host-side observer — token streams must be identical on vs off;
+    * **snapshot schema** (deterministic): the metrics-on snapshot passes
+      `check_snapshot` (operators script against this dict — drift is an
+      API break);
+    * **overhead** (wall-clock): min-of-``reps`` drain time on within
+      ``METRICS_OVERHEAD_TOL`` of off. Each engine instance carries its
+      own jitted step, so both get their own warmup drain before timing.
+    """
+    from repro.launch.serve import Server
+    from repro.serving import Request
+    from repro.serving.metrics import check_snapshot
+
+    plens, gens = make_short_workload()
+    server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
+    rng = np.random.default_rng(SEED + 10)
+    prompts = [rng.integers(0, server.cfg.vocab_size, size=int(L)).tolist()
+               for L in plens]
+
+    def drain(engine):
+        t0 = time.perf_counter()
+        states = [engine.submit(Request(prompt=tuple(p),
+                                        max_new_tokens=int(g)))
+                  for p, g in zip(prompts, gens)]
+        engine.run()
+        return time.perf_counter() - t0, [st.output() for st in states]
+
+    kw = dict(n_slots=SLOTS, fresh=True, prefill_bucket=PAGED_BUCKET,
+              step_horizon=PAGED_HORIZON, prefill_chunk=CHUNK_PREFILL,
+              kv_block_size=KV_BLOCK, kv_pool_tokens=SLOTS * MAX_LEN)
+    eng_on = server.engine(metrics=True, **kw)
+    eng_off = server.engine(metrics=False, **kw)
+    drain(eng_on)   # warmup: per-instance jitted step + admit buckets
+    drain(eng_off)
+    on_s, off_s = [], []
+    outs_on = outs_off = None
+    for _ in range(reps):
+        dt, outs_on = drain(eng_on)
+        on_s.append(dt)
+        dt, outs_off = drain(eng_off)
+        off_s.append(dt)
+    snap = eng_on.metrics.snapshot()
+    schema_problems = check_snapshot(snap)
+    overhead = min(on_s) / max(min(off_s), 1e-9) - 1.0
+    r = {
+        "on_s": min(on_s),
+        "off_s": min(off_s),
+        "overhead_frac": overhead,
+        "tolerance": METRICS_OVERHEAD_TOL,
+        "outputs_match": outs_on == outs_off,
+        "schema_problems": schema_problems,
+        "snapshot_counters": dict(snap["counters"]),
+        "overhead_ok": overhead <= METRICS_OVERHEAD_TOL,
+        "schema_ok": not schema_problems,
+    }
+    r["ok"] = r["overhead_ok"] and r["outputs_match"]
+    print_fn(f"serving_metrics_overhead,on_s={r['on_s']:.3f},"
+             f"off_s={r['off_s']:.3f},overhead={overhead * 100:.1f}%,"
+             f"outputs_match={r['outputs_match']},"
+             f"schema_problems={len(schema_problems)},"
+             f"{'PASS' if r['ok'] and r['schema_ok'] else 'FAIL'}")
+    return r
+
+
+# ---------------------------------------------------------------------------
 # 2) smoke wall-clock (tiny model, CPU-indicative)
 # ---------------------------------------------------------------------------
 
 
-def _pcts(lat: list) -> dict:
-    if not lat:
-        return {"p50_ms": 0.0, "p99_ms": 0.0}
-    a = np.asarray(lat) * 1e3
-    return {"p50_ms": float(np.percentile(a, 50)),
-            "p99_ms": float(np.percentile(a, 99))}
+# percentile math lives in the serving telemetry core now
+# (repro.serving.metrics.pcts_ms — same linear interpolation as
+# np.percentile, so historical BENCH_serving.json values stay comparable;
+# imported inside the smoke functions like every other repro import so the
+# bench module stays jax-free at import time)
 
 
 def _run_static(server, prompts, gens):
     """Batches of SLOTS in arrival order, lockstep to the batch max; a
     token's latency is the whole batch wall (the scan only surfaces tokens
     at the end). Useful tokens exclude the lockstep overrun rows."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     lat: list[float] = []
     toks = 0
     for s in range(0, len(prompts), SLOTS):
         bp, bg = prompts[s:s + SLOTS], gens[s:s + SLOTS]
-        tb = time.time()
+        tb = time.perf_counter()
         server.generate(bp, max_new_tokens=int(max(bg)))
-        dt = time.time() - tb
+        dt = time.perf_counter() - tb
         for g in bg:
             toks += int(g)
             lat += [dt] * int(g)
-    return toks / max(time.time() - t0, 1e-9), lat
+    return toks / max(time.perf_counter() - t0, 1e-9), lat
 
 
 def _run_engine(engine, prompts, gens, arrival):
@@ -395,7 +485,7 @@ def _run_engine(engine, prompts, gens, arrival):
     occ0 = engine.stats["occupancy_sum"]
     dev0 = engine.stats["device_steps"]
     base_steps = engine.stats["steps"]
-    t0 = time.time()
+    t0 = time.perf_counter()
     states, i = [], 0
     while i < len(prompts) or engine.has_work():
         idle = (engine.stats["steps"] - base_steps) \
@@ -407,11 +497,14 @@ def _run_engine(engine, prompts, gens, arrival):
                 prompt=tuple(prompts[i]), max_new_tokens=int(gens[i]))))
             i += 1
         engine.step()
-    wall = max(time.time() - t0, 1e-9)
+    wall = max(time.perf_counter() - t0, 1e-9)
     toks = sum(len(st.tokens) for st in states)
     lat: list[float] = []
     for st in states:
-        ts = [st.arrival_t] + st.token_times
+        # submit_t and token_times share the engine's monotonic clock, so
+        # the first-token gap can never come out negative (arrival_t is
+        # wall clock, for logs only)
+        ts = [st.submit_t] + st.token_times
         lat += [b - a for a, b in zip(ts, ts[1:])]
     occ = ((engine.stats["occupancy_sum"] - occ0)
            / max(engine.stats["device_steps"] - dev0, 1))
@@ -420,6 +513,7 @@ def _run_engine(engine, prompts, gens, arrival):
 
 def smoke_run(print_fn=print) -> dict:
     from repro.launch.serve import Server
+    from repro.serving.metrics import pcts_ms
 
     arrival, plens, gens = make_workload()
     server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
@@ -437,13 +531,27 @@ def smoke_run(print_fn=print) -> dict:
     static_tok_s, static_lat = _run_static(server, prompts, gens)
     engine_tok_s, engine_lat, occ = _run_engine(engine, prompts, gens,
                                                 arrival)
+    # request-level percentiles straight off the engine's own telemetry
+    # (accumulated over warmup + measured pass; ms to match the rest of
+    # the artifact)
+    snap = engine.metrics.snapshot()
     r = {
         "static_tok_s": static_tok_s,
         "engine_tok_s": engine_tok_s,
         "speedup": engine_tok_s / max(static_tok_s, 1e-9),
-        "static_latency": _pcts(static_lat),
-        "engine_latency": _pcts(engine_lat),
+        "static_latency": pcts_ms(static_lat),
+        "engine_latency": pcts_ms(engine_lat),
         "engine_occupancy": occ,
+        "engine_ttft_ms": {k: v * 1e3
+                           for k, v in snap["latency_s"]["ttft"].items()
+                           if k.startswith("p")},
+        "engine_tpot_ms": {k: v * 1e3
+                           for k, v in snap["latency_s"]["tpot"].items()
+                           if k.startswith("p")},
+        "engine_queue_wait_ms": {
+            k: v * 1e3
+            for k, v in snap["latency_s"]["queue_wait"].items()
+            if k.startswith("p")},
     }
     print_fn(f"serving_smoke,static_tok_s={static_tok_s:.1f},"
              f"engine_tok_s={engine_tok_s:.1f},speedup={r['speedup']:.2f}x,"
@@ -487,6 +595,14 @@ def run(print_fn=print, smoke: bool = True,
              f"stranded_slot_tokens={pm['slot_stranded_tokens']},"
              f"{'PASS' if paged_ok else 'FAIL'}")
 
+    # telemetry gates run even without smoke: bitwise zero-interference
+    # and the snapshot schema are deterministic, and --check (smoke=False)
+    # must catch an instrumentation regression before it ships
+    mo = metrics_overhead_run(print_fn)
+    results["metrics_overhead"] = mo
+    results["metrics_overhead_ok"] = mo["ok"]
+    results["metrics_schema_ok"] = mo["schema_ok"]
+
     if smoke:
         ps = paged_smoke_run(print_fn)
         results["paged_smoke"] = ps
@@ -520,6 +636,7 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
     r = run(smoke=not args.no_smoke, out_path=args.out)
     ok = (r["modeled_speedup_ok"] and r["paged_concurrency_ok"]
+          and r["metrics_overhead_ok"] and r["metrics_schema_ok"]
           and r.get("smoke_speedup_ok", True)
           and r.get("paged_smoke_ok", True)
           and r.get("chunked_paged_ok", True))

@@ -68,7 +68,10 @@ def serving_section(smoke: bool, section=None) -> list[str]:
     wall-clock on the tiny model and the real paged engine must beat the
     real slot engine's peak concurrency — with bitwise-matching outputs
     off-TPU (on TPU the two paths pick different attention tile sizes,
-    so only the concurrency half gates; see bench_serving).
+    so only the concurrency half gates; see bench_serving). The telemetry
+    gates (metrics-on bitwise-equal and within tolerance of metrics-off;
+    snapshot schema stable) run smoke or not, so --check catches
+    instrumentation regressions too.
     Smoke-less runs write to scratch (tracked BENCH_serving.json keeps its
     smoke history)."""
     from benchmarks import bench_serving
@@ -102,6 +105,13 @@ def serving_section(smoke: bool, section=None) -> list[str]:
     # and the one-shot engine (deterministic token equality, off-TPU)
     if smoke and not r.get("chunked_paged_ok", True):
         failures.append("serving_chunked_paged")
+    # telemetry gates run smoke or not: metrics-on must produce bitwise
+    # outputs and stay within tolerance of metrics-off wall-clock, and the
+    # operator snapshot must keep its schema (see bench_serving §5)
+    if not r.get("metrics_overhead_ok", True):
+        failures.append("serving_metrics_overhead")
+    if not r.get("metrics_schema_ok", True):
+        failures.append("serving_metrics_schema")
     return failures
 
 

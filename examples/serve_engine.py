@@ -19,6 +19,12 @@ pool accounting next to the slot stats.
 N-token chunk per engine step, `kernels/chunk_attn.py`'s prefix-clamped
 attention) so a long prompt never stalls running decodes — composable
 with ``--paged`` since the paged `attend_chunk` landed.
+
+``--metrics`` prints the operator snapshot after the drain — the same
+`Engine.metrics.snapshot()` dict a monitoring scraper would read:
+request latency percentiles (TTFT/TPOT/e2e/queue-wait), lifecycle and
+backpressure counters, occupancy/free-block gauges, and where each step's
+wall-clock went (host vs prefill vs device).
 """
 
 import argparse
@@ -44,6 +50,9 @@ def main():
     p.add_argument("--chunk", type=int, default=None,
                    help="chunked prefill: feed long prompts N tokens per "
                         "engine step (composes with --paged)")
+    p.add_argument("--metrics", action="store_true",
+                   help="print the Engine.metrics.snapshot() summary "
+                        "table after the drain")
     args = p.parse_args()
 
     server = Server(arch=args.arch, smoke=True, w_bits=args.w_bits,
@@ -84,6 +93,46 @@ def main():
           f"host transfers: {engine.stats['transfers']}")
     if engine.pool is not None:
         print(f"paged pool: {engine.pool.stats()}")
+    if args.metrics:
+        print_metrics(engine.metrics.snapshot())
+
+
+def print_metrics(snap):
+    """Operator summary table off the stable snapshot dict."""
+    ms = 1e3
+
+    print(f"\n-- engine metrics (schema v{snap['schema_version']}, "
+          f"{snap['elapsed_s']:.2f}s elapsed) --")
+    print("latency                p50        p90        p99      count")
+    for name in ("ttft", "tpot", "e2e", "queue_wait"):
+        h = snap["latency_s"][name]
+        print(f"  {name:<12s}"
+              + "".join(f"{h[p] * ms:9.2f}ms" for p in ("p50", "p90", "p99"))
+              + f"{h['count']:8d}")
+    c = snap["counters"]
+    print(f"requests: {c['submitted']} submitted, {c['admitted']} admitted, "
+          f"{c['finished']} finished "
+          f"(eos={c['finished_eos']}, length={c['finished_length']})")
+    print(f"tokens:   {c['tokens_out']} out | "
+          f"goodput {snap['throughput']['goodput_tok_s']:.1f} tok/s "
+          f"(raw {snap['throughput']['tok_s']:.1f})")
+    print(f"blocked:  slots={c['blocked_on_slots']} "
+          f"blocks={c['blocked_on_blocks']} budget={c['blocked_on_budget']} "
+          f"| horizon waste {c['horizon_waste_steps']} slot-steps")
+    g = snap["gauges"]
+    blocks = ("" if g["free_blocks"]["samples"] == 0
+              else f" | free blocks min={g['free_blocks']['min']:.0f}")
+    print(f"gauges:   occupancy mean={g['slot_occupancy']['mean']:.2f} "
+          f"max={g['slot_occupancy']['max']:.2f} | "
+          f"queue mean={g['queue_depth']['mean']:.1f} "
+          f"max={g['queue_depth']['max']:.0f}{blocks}")
+    ph = snap["phase_s"]
+    tot = max(ph["host"]["total"] + ph["prefill"]["total"]
+              + ph["device"]["total"], 1e-9)
+    print(f"phases:   host {ph['host']['total'] / tot * 100:.0f}% | "
+          f"prefill {ph['prefill']['total'] / tot * 100:.0f}% | "
+          f"device {ph['device']['total'] / tot * 100:.0f}% "
+          f"of {tot:.2f}s stepped")
 
 
 if __name__ == "__main__":

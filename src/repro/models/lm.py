@@ -37,6 +37,20 @@ from repro.models.loss import logits_last_token, xent_chunked
 Array = jax.Array
 
 
+def _scoped(name: str):
+    """Wrap a forward fn in `jax.named_scope` so profiler traces
+    (`REPRO_TRACE_DIR`, see `serving.engine.Engine.run`) attribute device
+    time to the serving phase that issued it. Naming metadata only — the
+    lowered math, and therefore every token, is bitwise unchanged."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with jax.named_scope(name):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
 # ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
@@ -287,6 +301,7 @@ def _pad_cache(cache_kv: dict, max_len: int, seq_axis: int = 3) -> dict:
     return jax.tree.map(pad, cache_kv)
 
 
+@_scoped("repro.prefill")
 def prefill(params, tokens, cfg: ArchConfig, ctx: ModelContext, *,
             max_len: int, image_embeds: Optional[Array] = None,
             last_pos: Optional[Array] = None):
@@ -461,6 +476,7 @@ def _vlm_prefill(params, h, image_embeds, cfg, ctx, max_len):
 # ---------------------------------------------------------------------------
 
 
+@_scoped("repro.decode_step")
 def decode_step(params, cache: dict, tokens: Array, cfg: ArchConfig,
                 ctx: ModelContext, *, block_tables: Optional[Array] = None):
     """One token for every sequence. tokens: (B, 1) (audio: (B, 1, n_cb)).
@@ -769,6 +785,7 @@ def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
     return toks, cache
 
 
+@_scoped("repro.ragged_decode_step")
 def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
                        active: Array, sampling: dict, base_key: Array,
                        cfg: ArchConfig, ctx: ModelContext, *,
@@ -829,6 +846,7 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
     return nxt, new_cache
 
 
+@_scoped("repro.prefill_chunk")
 def prefill_chunk(params, attn_cache: dict, tokens: Array, start: Array,
                   cfg: ArchConfig, ctx: ModelContext, *,
                   last_pos: Optional[Array] = None,

@@ -93,6 +93,23 @@ tiny int32 host→device uploads on block events, and the step's single
 device→host transfer is still the stacked-token block. Worst-case
 reservation keeps the no-preemption engine deadlock-free; optimistic
 overcommit arrives with preemption/swapping (ROADMAP).
+
+Observability
+-------------
+
+Every engine carries an `EngineMetrics` facade (``Engine.metrics``,
+`repro.serving.metrics`): request-lifecycle events (submit → admit →
+prefill-chunk → first-token → retire with reason), TTFT/TPOT/e2e/
+queue-wait log-bucket histograms, per-step queue-depth / slot-occupancy /
+free-block gauges, admission-backpressure counters (blocked on slots vs
+blocks vs prefill budget), the horizon-waste account (slot-steps stranded
+by mid-block retirement), and host/prefill/device phase timing around the
+single compiled call. ``Engine.metrics.snapshot()`` exports the stable
+operator schema; ``REPRO_METRICS_LOG`` appends lifecycle events as JSONL;
+``REPRO_TRACE_DIR`` wraps `Engine.run` in a `jax.profiler` trace with
+`named_scope` phase annotations. All of it is host-side observation —
+metrics on vs off is bitwise invisible in the token streams (pinned by
+`tests/test_metrics.py` and the `serving_metrics_overhead` gate).
 """
 
 from __future__ import annotations
@@ -109,6 +126,7 @@ from repro.configs import ArchConfig
 from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.blocks import ModelContext
+from repro.serving.metrics import EngineMetrics
 from repro.serving.paged import BlockPool, init_paged_cache
 from repro.serving.request import (
     FINISHED,
@@ -135,7 +153,9 @@ class Engine:
                  step_horizon: int = 1,
                  kv_block_size: Optional[int] = None,
                  kv_pool_tokens: Optional[int] = None,
-                 base_seed: int = 0):
+                 base_seed: int = 0,
+                 clock: Optional[callable] = None,
+                 metrics: Union[bool, EngineMetrics, None] = None):
         if cfg.family not in _ENGINE_FAMILIES:
             raise NotImplementedError(
                 f"continuous batching supports {_ENGINE_FAMILIES}, "
@@ -154,6 +174,19 @@ class Engine:
         self.prefill_chunk = prefill_chunk
         self.step_horizon = step_horizon
         self._base_key = jax.random.PRNGKey(base_seed)
+        # every latency stamp goes through this monotonic clock (wall
+        # clock steps — NTP, suspend — must never reach TTFT/TPOT math);
+        # tests inject metrics.FakeClock for deterministic latencies
+        self.clock = clock if clock is not None else time.perf_counter
+        if isinstance(metrics, EngineMetrics):
+            self.metrics = metrics
+        else:
+            # metrics are host-side observers only: enabled or not, the
+            # engine's device calls and token streams are bitwise
+            # identical (pinned by tests + the run.py overhead gate)
+            self.metrics = EngineMetrics(
+                enabled=True if metrics is None else bool(metrics),
+                clock=self.clock)
 
         self.pool: Optional[BlockPool] = None
         if kv_block_size is not None:
@@ -267,8 +300,10 @@ class Engine:
             new_step = step + active.astype(jnp.int32)
             return (nxt, new_pos, new_step, nc), tok
 
-        (tok, pos, step, cache), emitted = jax.lax.scan(
-            body, (tok, pos, step, cache), None, length=self.step_horizon)
+        # named for REPRO_TRACE_DIR profiles: the horizon decode block
+        with jax.named_scope("repro.engine.decode_horizon"):
+            (tok, pos, step, cache), emitted = jax.lax.scan(
+                body, (tok, pos, step, cache), None, length=self.step_horizon)
         return emitted, tok, pos, step, cache
 
     def _insert_rows(self, pool: dict, rows: dict, slots) -> dict:
@@ -323,13 +358,14 @@ class Engine:
             if self.pool is None:
                 def f(cache, tok, toks, last_pos, slots, seed, temp, top_k,
                       top_p, greedy):
-                    logits, rows = lm.prefill(self.params, toks, self.cfg,
-                                              self.ctx, max_len=self.max_len,
-                                              last_pos=last_pos)
-                    new_cache = self._insert_rows(cache, rows, slots)
-                    first = self._first_tokens(logits, seed, temp, top_k,
-                                               top_p, greedy, sample)
-                    tok = tok.at[slots].set(first)
+                    with jax.named_scope("repro.engine.admit"):
+                        logits, rows = lm.prefill(
+                            self.params, toks, self.cfg, self.ctx,
+                            max_len=self.max_len, last_pos=last_pos)
+                        new_cache = self._insert_rows(cache, rows, slots)
+                        first = self._first_tokens(logits, seed, temp, top_k,
+                                                   top_p, greedy, sample)
+                        tok = tok.at[slots].set(first)
                     return tok, new_cache
             else:
                 # paged: the prefill KV is padded only to whole blocks
@@ -339,13 +375,14 @@ class Engine:
 
                 def f(cache, tok, toks, last_pos, slots, phys, seed, temp,
                       top_k, top_p, greedy):
-                    logits, rows = lm.prefill(self.params, toks, self.cfg,
-                                              self.ctx, max_len=p_len,
-                                              last_pos=last_pos)
-                    new_cache = self._insert_blocks(cache, rows, phys)
-                    first = self._first_tokens(logits, seed, temp, top_k,
-                                               top_p, greedy, sample)
-                    tok = tok.at[slots].set(first)
+                    with jax.named_scope("repro.engine.admit"):
+                        logits, rows = lm.prefill(
+                            self.params, toks, self.cfg, self.ctx,
+                            max_len=p_len, last_pos=last_pos)
+                        new_cache = self._insert_blocks(cache, rows, phys)
+                        first = self._first_tokens(logits, seed, temp, top_k,
+                                                   top_p, greedy, sample)
+                        tok = tok.at[slots].set(first)
                     return tok, new_cache
 
             self._admit_fns[(padded_len, k, sample)] = jax.jit(f)
@@ -474,9 +511,10 @@ class Engine:
                 f"the pool only has {self.pool.n_blocks} — it could never "
                 "be admitted")
         state = RequestState(request=request, request_id=self._next_id,
-                             arrival_t=time.time())
+                             arrival_t=time.time(), submit_t=self.clock())
         self._next_id += 1
         self.scheduler.submit(state)
+        self.metrics.on_submit(state)
         return state
 
     # ------------------------------------------------------------------
@@ -490,20 +528,43 @@ class Engine:
     def step(self) -> None:
         """One engine step: emit+retire, admit, advance prefills, decode a
         horizon block. Exactly one device→host transfer (the stacked-token
-        block) happens per step with any running row."""
+        block) happens per step with any running row.
+
+        Telemetry rides the loop without touching it: lifecycle hooks
+        (first token, retire+reason, admit) fire as the host observes the
+        events, per-step gauges (queue depth / occupancy / free blocks)
+        are sampled once before the device call, and the step's wall time
+        is split into host / admission-prefill / device phases — the
+        device phase brackets the single compiled call plus its transfer,
+        which is where the step blocks. All of it is host-side python;
+        metrics on vs off cannot change a token."""
+        mx = self.metrics
+        rec = mx.enabled
+        t0 = self.clock() if rec else 0.0
+        t_prefill = 0.0
         self.stats["steps"] += 1
+        mx.count("steps")
 
         # 1) bookkeeping for the token block produced last step
         if self._pending is not None:
-            now = time.time()
+            now = self.clock()
+            H = self._pending.shape[0]
             for slot, st in self._pending_slots:
-                for h in range(self._pending.shape[0]):
+                for h in range(H):
                     st.tokens.append(int(self._pending[h, slot, 0]))
                     st.token_times.append(now)
                     self.stats["tokens_out"] += 1
+                    mx.count("tokens_out")
+                    if len(st.tokens) == 1:
+                        st.first_token_t = now
+                        mx.on_first_token(st)
                     reason = self.scheduler.finish_reason(st)
                     if reason is not None:
-                        self._retire(slot, st, reason)
+                        # a mid-block finish strands the rest of the
+                        # horizon: H-1-h slot-steps of device work whose
+                        # tokens are discarded (the horizon-waste account)
+                        self._retire(slot, st, reason,
+                                     horizon_waste=H - 1 - h)
                         break
             self._pending = None
             self._pending_slots = []
@@ -515,6 +576,7 @@ class Engine:
         # short requests pack — but when the pool runs dry the head of the
         # queue waits (clean backpressure, no reordering past it).
         free = [i for i, s in enumerate(self._slots) if s is None]
+        blocked = None  # this step's backpressure attribution (one count)
         if free:
             can_admit = None
             if self.pool is not None:
@@ -534,7 +596,7 @@ class Engine:
             for st in admits:
                 slot = free.pop(0)
                 st.slot = slot
-                st.admit_t = time.time()
+                st.admit_t = self.clock()
                 self._slots[slot] = st
                 self._set_row_params(slot, st)
                 if self.pool is not None:
@@ -542,6 +604,7 @@ class Engine:
                         slot,
                         self.pool.blocks_for(self._need_tokens(st.request)))
                 self.stats["admitted"] += 1
+                mx.on_admit(st)
                 if self.prefill_chunk is not None \
                         and st.prompt_len > self.prefill_chunk:
                     st.status = PREFILLING
@@ -549,20 +612,39 @@ class Engine:
                 else:
                     batch.setdefault(self._padded_len(st.prompt_len),
                                      []).append((st, slot))
+            if len(self.scheduler) and free:
+                # slots left over but the queue head refused: the pool
+                # (can_admit → "resource") or the prefill budget
+                blocked = {"resource": "blocks", "budget": "budget"}.get(
+                    self.scheduler.last_refusal)
             for padded, group in batch.items():
+                tp = self.clock() if rec else 0.0
                 self._admit_group(
                     padded, group,
                     any(not st.request.sampling.greedy for st, _ in group))
+                if rec:
+                    t_prefill += self.clock() - tp
+        elif len(self.scheduler):
+            blocked = "slots"  # queued work, zero free slots
+        if blocked is not None:
+            mx.on_blocked(blocked)
 
         # 3) chunked-prefill rows advance one chunk
         for slot, st in enumerate(self._slots):
             if st is not None and st.status == PREFILLING:
+                tp = self.clock() if rec else 0.0
                 self._advance_prefill(slot, st)
+                if rec:
+                    t_prefill += self.clock() - tp
 
         # 4) device step (one jitted call decoding `step_horizon` tokens),
         # then the block's ONE device→host transfer
         running = [(i, s) for i, s in enumerate(self._slots)
                    if s is not None and s.status == RUNNING]
+        mx.sample_step(
+            queue_depth=len(self.scheduler), running=len(running),
+            n_slots=self.n_slots,
+            free_blocks=None if self.pool is None else self.pool.free_blocks)
         if running:
             if self.pool is not None:
                 # alloc-on-demand: map every block the horizon's writes
@@ -581,8 +663,10 @@ class Engine:
                                              len(running))
             self.stats["transfers"] += 1
             self.stats["device_steps"] += 1
+            mx.count("device_steps")
             d = self._dev
             sample = any(not s.request.sampling.greedy for _, s in running)
+            td0 = self.clock() if rec else 0.0
             emitted, self._tok, d["pos"], d["step"], self.cache = \
                 self._step_fn(self.cache, self._tok, d["pos"], d["step"],
                               d["active"], d["greedy"], d["temp"],
@@ -594,9 +678,31 @@ class Engine:
             h = self.step_horizon
             self._pos = np.where(self._active, self._pos + h, self._pos)
             self._n_sampled = self._n_sampled + h * self._active
+            if rec:
+                # the np.asarray above blocked on the device result, so
+                # td1-td0 brackets the compiled horizon call + transfer
+                td1 = self.clock()
+                mx.observe_step(
+                    host_s=(self.clock() - t0) - (td1 - td0) - t_prefill,
+                    prefill_s=t_prefill, device_s=td1 - td0)
+        elif rec:
+            mx.observe_step(host_s=(self.clock() - t0) - t_prefill,
+                            prefill_s=t_prefill)
 
     def run(self, max_steps: int = 1_000_000) -> None:
-        """Drain: step until queue and slots are empty."""
+        """Drain: step until queue and slots are empty. With
+        ``REPRO_TRACE_DIR`` set, the drain runs under a `jax.profiler`
+        trace written to that directory — the compiled admit/chunk/decode
+        calls carry `jax.named_scope` annotations (``repro.engine.*``,
+        ``repro.prefill`` / ``repro.decode_step`` in `models/lm.py`), so
+        the trace attributes device time to serving phases."""
+        trace_dir = os.environ.get("REPRO_TRACE_DIR")
+        if trace_dir:
+            with jax.profiler.trace(trace_dir):
+                return self._drain(max_steps)
+        return self._drain(max_steps)
+
+    def _drain(self, max_steps: int) -> None:
         for _ in range(max_steps):
             if not self.has_work():
                 return
@@ -677,6 +783,7 @@ class Engine:
         L = st.prompt_len
         start = st.prefill_pos
         end = min(start + chunk, L)
+        self.metrics.on_prefill_chunk(st, start, end)
         toks = np.zeros((1, chunk), np.int32)
         toks[0, : end - start] = st.request.prompt[start:end]
         # the chunk writes its full (padded) width: positions
@@ -734,10 +841,11 @@ class Engine:
         self._n_sampled[slot] = 1  # the first token was sampled at admit
         self._dirty = True
 
-    def _retire(self, slot: int, st: RequestState, reason: str) -> None:
+    def _retire(self, slot: int, st: RequestState, reason: str,
+                horizon_waste: int = 0) -> None:
         st.status = FINISHED
         st.finish_reason = reason
-        st.finish_t = time.time()
+        st.finish_t = self.clock()
         st.slot = -1
         self._slots[slot] = None
         self._active[slot] = False
@@ -748,6 +856,7 @@ class Engine:
             self.pool.release(slot)
         self._dirty = True
         self.stats["finished"] += 1
+        self.metrics.on_retire(st, reason, horizon_waste)
 
     # ------------------------------------------------------------------
     # convenience driver
@@ -765,7 +874,7 @@ class Engine:
             seed = self._auto_seed
             self._auto_seed += len(prompts)
         before = dict(self.stats)  # engines are reusable: report deltas
-        t0 = time.time()
+        t0 = self.clock()
         states = [
             self.submit(Request(
                 prompt=tuple(p), max_new_tokens=max_new_tokens,
@@ -777,7 +886,7 @@ class Engine:
             for i, p in enumerate(prompts)
         ]
         self.run()
-        dt = max(time.time() - t0, 1e-9)
+        dt = max(self.clock() - t0, 1e-9)
         outs = [st.output() for st in states]
         n_out = sum(len(o) for o in outs)
         dev = self.stats["device_steps"] - before["device_steps"]

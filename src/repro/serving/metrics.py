@@ -1,0 +1,423 @@
+"""Dependency-free metrics core + the engine's telemetry facade.
+
+Three primitives, stdlib-only (no numpy/jax — importable anywhere, usable
+from host-side hot loops without pulling device state):
+
+* `Counter`s — plain monotonic ints, kept in a dict on the facade.
+* `Gauge` — last-sampled value plus min/max/mean over the samples (the
+  engine samples queue depth, slot occupancy and free-block count once
+  per step).
+* `Histogram` — fixed log-spaced buckets with percentile *estimation*:
+  values land in geometric buckets (default 8 per decade, 1µs..10ks), a
+  percentile walks the cumulative counts and interpolates geometrically
+  inside its bucket, clamped to the exact observed min/max. Relative
+  error is bounded by the bucket growth factor (~33% at 8/decade) and
+  memory is O(buckets), never O(samples) — the right trade for an
+  always-on serving counter. `percentiles` is the *exact* (sorted,
+  linearly interpolated — numpy-default-compatible) helper for offline
+  lists; the benchmarks share it instead of carrying their own.
+
+Timestamps are **monotonic** (`time.perf_counter` by default): TTFT/TPOT
+math must never see a wall-clock step (NTP slew, suspend). The one
+wall-clock stamp kept is `RequestState.arrival_t`, for logs. The clock is
+injectable — `FakeClock` makes every latency test deterministic.
+
+`EngineMetrics` is the facade the engine drives through lifecycle hooks
+(`on_submit` → `on_admit` → `on_prefill_chunk`* → `on_first_token` →
+`on_retire`) plus per-step samples (`sample_step`) and phase timings
+(`observe_step`: host vs admission-prefill vs the single compiled decode
+call). ``enabled=False`` turns every hook into an early-return no-op —
+the engine's outputs are bitwise identical either way (metrics never
+touch device code; the zero-interference test pins it).
+
+`snapshot()` returns a **stable plain-dict schema** (see
+`SNAPSHOT_SCHEMA`; `check_snapshot` verifies an instance against it so
+field renames fail loudly in `run.py --check`). With `REPRO_METRICS_LOG`
+set (or `log_path=`), lifecycle events append as JSONL — one object per
+line with both wall and monotonic stamps — for offline trace tools.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Callable, Optional, Sequence
+
+
+class FakeClock:
+    """Deterministic injectable clock: returns a manually advanced time."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# percentile helpers (exact, shared with the benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def percentiles(values: Sequence[float], ps: Sequence[float]) -> list:
+    """Exact percentiles of ``values`` via sort + linear interpolation
+    (the numpy default "linear" method, reimplemented so the metrics core
+    stays dependency-free). Empty input maps every p to 0.0."""
+    if not values:
+        return [0.0 for _ in ps]
+    s = sorted(float(v) for v in values)
+    n = len(s)
+    out = []
+    for p in ps:
+        rank = (float(p) / 100.0) * (n - 1)
+        lo = int(math.floor(rank))
+        hi = min(lo + 1, n - 1)
+        frac = rank - lo
+        out.append(s[lo] + (s[hi] - s[lo]) * frac)
+    return out
+
+
+def pcts_ms(seconds: Sequence[float], ps: Sequence[float] = (50, 99)) -> dict:
+    """``{"p50_ms": ..., "p99_ms": ...}`` from a list of second-valued
+    latencies — the shape the serving benchmark records."""
+    vals = percentiles([v * 1e3 for v in seconds], ps)
+    return {f"p{int(p)}_ms": float(v) for p, v in zip(ps, vals)}
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+class Gauge:
+    """Last-set value plus min/max/mean over all samples."""
+
+    __slots__ = ("last", "vmin", "vmax", "total", "samples")
+
+    def __init__(self):
+        self.last: Optional[float] = None
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self.total = 0.0
+        self.samples = 0
+
+    def set(self, v: float) -> None:
+        v = float(v)
+        self.last = v
+        self.vmin = min(self.vmin, v)
+        self.vmax = max(self.vmax, v)
+        self.total += v
+        self.samples += 1
+
+    def summary(self) -> dict:
+        if not self.samples:
+            return {"last": None, "min": None, "max": None, "mean": None,
+                    "samples": 0}
+        return {"last": self.last, "min": self.vmin, "max": self.vmax,
+                "mean": self.total / self.samples, "samples": self.samples}
+
+
+class Histogram:
+    """Log-bucketed histogram over (0, inf) with percentile estimation.
+
+    Bucket i spans ``[lo * g**i, lo * g**(i+1))`` with ``g = 10**(1 /
+    buckets_per_decade)``; values below ``lo`` land in bucket 0, values at
+    or above ``hi`` in the last bucket. ``percentile`` walks the
+    cumulative counts to the target rank and interpolates geometrically
+    within the bucket, then clamps to the exact observed [min, max] — so
+    p0/p100 are exact and every estimate is within one bucket's growth
+    factor of the true order statistic.
+    """
+
+    __slots__ = ("lo", "hi", "counts", "n", "total", "vmin", "vmax",
+                 "_inv_log_g", "_log_lo", "_g")
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e4,
+                 buckets_per_decade: int = 8):
+        if not (0 < lo < hi):
+            raise ValueError(f"need 0 < lo < hi, got lo={lo} hi={hi}")
+        decades = math.log10(hi / lo)
+        n_buckets = max(1, int(round(decades * buckets_per_decade)))
+        self.lo, self.hi = float(lo), float(hi)
+        self._g = 10.0 ** (1.0 / buckets_per_decade)
+        self._log_lo = math.log(self.lo)
+        self._inv_log_g = 1.0 / math.log(self._g)
+        self.counts = [0] * n_buckets
+        self.n = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def _index(self, v: float) -> int:
+        if v <= self.lo:
+            return 0
+        i = int((math.log(v) - self._log_lo) * self._inv_log_g)
+        return min(i, len(self.counts) - 1)
+
+    def bucket_bounds(self, i: int) -> tuple:
+        """[lower, upper) edges of bucket ``i``."""
+        return (self.lo * self._g ** i, self.lo * self._g ** (i + 1))
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        self.n += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        self.counts[self._index(v)] += 1
+
+    def percentile(self, p: float) -> float:
+        if not self.n:
+            return 0.0
+        target = (float(p) / 100.0) * self.n
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            if seen + c >= target:
+                lo_edge, hi_edge = self.bucket_bounds(i)
+                frac = (target - seen) / c
+                est = lo_edge * (hi_edge / lo_edge) ** frac
+                return min(max(est, self.vmin), self.vmax)
+            seen += c
+        return self.vmax
+
+    def summary(self, ps: Sequence[float] = (50, 90, 99)) -> dict:
+        out = {
+            "count": self.n,
+            "mean": (self.total / self.n) if self.n else 0.0,
+            "min": self.vmin if self.n else 0.0,
+            "max": self.vmax if self.n else 0.0,
+        }
+        for p in ps:
+            out[f"p{int(p)}"] = self.percentile(p)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the engine facade
+# ---------------------------------------------------------------------------
+
+COUNTER_NAMES = (
+    "submitted", "admitted", "finished", "finished_eos", "finished_length",
+    "tokens_out", "tokens_finished", "prefill_chunks",
+    "blocked_on_slots", "blocked_on_blocks", "blocked_on_budget",
+    "horizon_waste_steps", "steps", "device_steps",
+)
+
+_HIST_KEYS = ("count", "mean", "min", "max", "p50", "p90", "p99")
+_GAUGE_KEYS = ("last", "min", "max", "mean", "samples")
+_PHASE_KEYS = _HIST_KEYS + ("total",)
+
+#: The stable snapshot layout: section -> field -> nested keys (None for
+#: scalars). `check_snapshot` verifies an instance against this and the
+#: metrics test pins it — rename a field and both fail loudly.
+SNAPSHOT_SCHEMA = {
+    "schema_version": None,
+    "elapsed_s": None,
+    "counters": {name: None for name in COUNTER_NAMES},
+    "gauges": {name: dict.fromkeys(_GAUGE_KEYS)
+               for name in ("queue_depth", "slot_occupancy", "free_blocks")},
+    "latency_s": {name: dict.fromkeys(_HIST_KEYS)
+                  for name in ("ttft", "tpot", "e2e", "queue_wait")},
+    "phase_s": {name: dict.fromkeys(_PHASE_KEYS)
+                for name in ("host", "prefill", "device")},
+    "throughput": {"tok_s": None, "goodput_tok_s": None},
+}
+
+SCHEMA_VERSION = 1
+
+
+def check_snapshot(snap: dict) -> list:
+    """Structural check of a snapshot against `SNAPSHOT_SCHEMA`. Returns a
+    list of human-readable mismatches (empty == conforming) — the
+    `run.py --check` schema gate prints and fails on any entry."""
+    problems: list[str] = []
+
+    def walk(expected, got, path):
+        if expected is None:
+            return  # scalar leaf; value type is the producer's business
+        if not isinstance(got, dict):
+            problems.append(f"{path}: expected a dict, got {type(got).__name__}")
+            return
+        missing = set(expected) - set(got)
+        extra = set(got) - set(expected)
+        for k in sorted(missing):
+            problems.append(f"{path}.{k}: missing")
+        for k in sorted(extra):
+            problems.append(f"{path}.{k}: unexpected field")
+        for k in sorted(set(expected) & set(got)):
+            walk(expected[k], got[k], f"{path}.{k}")
+
+    walk(SNAPSHOT_SCHEMA, snap, "snapshot")
+    if not problems and snap.get("schema_version") != SCHEMA_VERSION:
+        problems.append(
+            f"snapshot.schema_version: expected {SCHEMA_VERSION}, "
+            f"got {snap.get('schema_version')!r}")
+    return problems
+
+
+class EngineMetrics:
+    """The engine's telemetry facade: lifecycle hooks in, snapshot out.
+
+    All state is host-side python; hooks are no-ops when ``enabled`` is
+    False. The engine stamps `RequestState` monotonic timestamps *before*
+    calling the hooks, so the facade only derives (it never reads the
+    clock mid-request — deriving from stamps keeps TTFT/TPOT/e2e exactly
+    consistent with the per-request record a client sees).
+    """
+
+    def __init__(self, *, enabled: bool = True,
+                 clock: Callable[[], float] = time.perf_counter,
+                 log_path: Optional[str] = None):
+        self.enabled = bool(enabled)
+        self.clock = clock
+        self.counters = dict.fromkeys(COUNTER_NAMES, 0)
+        self.gauges = {"queue_depth": Gauge(), "slot_occupancy": Gauge(),
+                       "free_blocks": Gauge()}
+        self.latency = {"ttft": Histogram(), "tpot": Histogram(),
+                        "e2e": Histogram(), "queue_wait": Histogram()}
+        self.phase = {"host": Histogram(), "prefill": Histogram(),
+                      "device": Histogram()}
+        self._t0 = clock() if self.enabled else 0.0
+        self._log = None
+        if self.enabled:
+            if log_path is None:
+                log_path = os.environ.get("REPRO_METRICS_LOG") or None
+            if log_path:
+                self._log = open(log_path, "a")
+
+    # -- counters / events ------------------------------------------------
+
+    def count(self, name: str, n: int = 1) -> None:
+        if self.enabled:
+            self.counters[name] += n
+
+    def event(self, name: str, **fields) -> None:
+        """Append one JSONL record to the event log (no-op without a
+        sink). Records carry both stamps: ``t`` monotonic (joinable with
+        the snapshot's latency math) and ``t_wall`` for humans."""
+        if self._log is None:
+            return
+        rec = {"t": self.clock(), "t_wall": time.time(), "event": name}
+        rec.update(fields)
+        self._log.write(json.dumps(rec) + "\n")
+        self._log.flush()
+
+    def close(self) -> None:
+        if self._log is not None:
+            self._log.close()
+            self._log = None
+
+    # -- request lifecycle ------------------------------------------------
+
+    def on_submit(self, st) -> None:
+        if not self.enabled:
+            return
+        self.counters["submitted"] += 1
+        self.event("submit", request_id=st.request_id,
+                   prompt_len=st.prompt_len,
+                   max_new_tokens=st.request.max_new_tokens)
+
+    def on_admit(self, st) -> None:
+        if not self.enabled:
+            return
+        self.counters["admitted"] += 1
+        wait = st.admit_t - st.submit_t
+        self.latency["queue_wait"].record(wait)
+        self.event("admit", request_id=st.request_id, slot=st.slot,
+                   queue_wait_s=wait)
+
+    def on_prefill_chunk(self, st, start: int, end: int) -> None:
+        if not self.enabled:
+            return
+        self.counters["prefill_chunks"] += 1
+        self.event("prefill_chunk", request_id=st.request_id, slot=st.slot,
+                   start=start, end=end)
+
+    def on_first_token(self, st) -> None:
+        if not self.enabled:
+            return
+        ttft = st.first_token_t - st.submit_t
+        self.latency["ttft"].record(ttft)
+        self.event("first_token", request_id=st.request_id, ttft_s=ttft)
+
+    def on_retire(self, st, reason: str, horizon_waste: int) -> None:
+        if not self.enabled:
+            return
+        c = self.counters
+        c["finished"] += 1
+        key = f"finished_{reason}"
+        if key in c:
+            c[key] += 1
+        c["tokens_finished"] += len(st.tokens)
+        c["horizon_waste_steps"] += int(horizon_waste)
+        e2e = st.finish_t - st.submit_t
+        self.latency["e2e"].record(e2e)
+        if len(st.tokens) > 1 and st.first_token_t is not None:
+            self.latency["tpot"].record(
+                (st.finish_t - st.first_token_t) / (len(st.tokens) - 1))
+        self.event("retire", request_id=st.request_id, reason=reason,
+                   n_tokens=len(st.tokens), e2e_s=e2e,
+                   horizon_waste_steps=int(horizon_waste))
+
+    def on_blocked(self, kind: str) -> None:
+        """One per engine step spent with queued work that could not be
+        admitted: ``kind`` in slots / blocks / budget."""
+        self.count(f"blocked_on_{kind}")
+
+    # -- per-step samples -------------------------------------------------
+
+    def sample_step(self, *, queue_depth: int, running: int, n_slots: int,
+                    free_blocks: Optional[int]) -> None:
+        if not self.enabled:
+            return
+        self.gauges["queue_depth"].set(queue_depth)
+        self.gauges["slot_occupancy"].set(running / max(n_slots, 1))
+        if free_blocks is not None:
+            self.gauges["free_blocks"].set(free_blocks)
+
+    def observe_step(self, *, host_s: float, prefill_s: float = 0.0,
+                     device_s: Optional[float] = None) -> None:
+        """Phase timing for one engine step: ``device_s`` is the single
+        compiled decode call (transfer included — that is where the step
+        blocks), ``prefill_s`` the admission/chunk compiled calls, and
+        ``host_s`` everything else (scheduling, bookkeeping, uploads)."""
+        if not self.enabled:
+            return
+        self.phase["host"].record(host_s)
+        if prefill_s > 0.0:
+            self.phase["prefill"].record(prefill_s)
+        if device_s is not None:
+            self.phase["device"].record(device_s)
+
+    # -- export -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """The stable plain-dict export (see `SNAPSHOT_SCHEMA`)."""
+        elapsed = max(self.clock() - self._t0, 0.0) if self.enabled else 0.0
+        denom = max(elapsed, 1e-9)
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "elapsed_s": elapsed,
+            "counters": dict(self.counters),
+            "gauges": {k: g.summary() for k, g in self.gauges.items()},
+            "latency_s": {k: h.summary() for k, h in self.latency.items()},
+            "phase_s": {k: dict(h.summary(), total=h.total)
+                        for k, h in self.phase.items()},
+            "throughput": {
+                "tok_s": self.counters["tokens_out"] / denom,
+                "goodput_tok_s": self.counters["tokens_finished"] / denom,
+            },
+        }
+
+    def to_json(self, **dump_kw) -> str:
+        return json.dumps(self.snapshot(), **dump_kw)

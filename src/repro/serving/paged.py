@@ -83,6 +83,10 @@ class BlockPool:
         self._reserved = np.zeros(n_slots, np.int64)
         self.table = np.full((n_slots, max_blocks), TRASH, np.int32)
         self.peak_used = 0
+        # low watermark of the free list over the pool's lifetime — the
+        # operator's "how close did we run to exhaustion" gauge (0 means
+        # admission backpressure actually engaged at some point)
+        self.min_free = n_blocks
 
     # -- capacity queries ------------------------------------------------
 
@@ -149,6 +153,7 @@ class BlockPool:
             held.append(blk)
             self.table[slot, i] = blk
         self.peak_used = max(self.peak_used, self.used_blocks)
+        self.min_free = min(self.min_free, len(self._free))
         return True
 
     def release(self, slot: int) -> None:
@@ -168,6 +173,7 @@ class BlockPool:
             "used_blocks": self.used_blocks,
             "reserved_blocks": self.reserved_blocks,
             "peak_used_blocks": self.peak_used,
+            "min_free_blocks": self.min_free,
         }
 
 

@@ -4,7 +4,14 @@ A `Request` is what a client submits: prompt ids, a generation budget, a
 stop token, and per-request `SamplingParams` (greedy / temperature / top-k /
 top-p / seed). The engine wraps it in a `RequestState` — queue bookkeeping,
 the slot it occupies while running, the streamed token buffer, and
-arrival/admit/finish timestamps for latency accounting.
+lifecycle timestamps for latency accounting.
+
+Timestamp contract: every latency-bearing stamp (`submit_t`, `admit_t`,
+`first_token_t`, `finish_t`, `token_times`) comes from the engine's
+injected **monotonic** clock (`time.perf_counter` by default,
+`metrics.FakeClock` in tests) — TTFT/TPOT/e2e differences must never see
+a wall-clock step. `arrival_t` is the one wall-clock (`time.time`) stamp,
+kept so logs can be correlated with the outside world.
 """
 
 from __future__ import annotations
@@ -58,13 +65,15 @@ QUEUED, PREFILLING, RUNNING, FINISHED = \
 class RequestState:
     request: Request
     request_id: int
-    arrival_t: float
-    status: str = QUEUED
+    arrival_t: float              # wall clock (time.time), for logs only
+    submit_t: float = 0.0         # monotonic; every latency delta below
+    status: str = QUEUED          # is computed against this clock
     slot: int = -1
     prefill_pos: int = 0          # chunked prefill frontier
     tokens: list[int] = dataclasses.field(default_factory=list)
     token_times: list[float] = dataclasses.field(default_factory=list)
     admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     finish_reason: Optional[str] = None  # "eos" | "length"
 

@@ -32,6 +32,12 @@ class Scheduler:
         self._heap: list[tuple[int, int, RequestState]] = []
         self._seq = itertools.count()
         self.max_prefill_tokens = max_prefill_tokens
+        # why the last pop_admissions stopped with work still queued:
+        # "resource" (can_admit refused the head — in paged mode, no free
+        # blocks), "budget" (prefill-token budget spent), or None (free
+        # slots ran out / queue drained). The engine's metrics layer turns
+        # this into the blocked_on_{blocks,budget} backpressure counters.
+        self.last_refusal: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -58,14 +64,19 @@ class Scheduler:
         admitted: list[RequestState] = []
         budget = self.max_prefill_tokens
         spent = 0
+        self.last_refusal = None
         while self._heap and len(admitted) < n_free:
             _, _, state = self._heap[0]
             if can_admit is not None and not can_admit(state):
-                break  # resource backpressure: stays queued, FIFO-faithful
+                # resource backpressure: stays queued, FIFO-faithful
+                self.last_refusal = "resource"
+                break
             cost = state.prompt_len if chunk is None \
                 else min(state.prompt_len, chunk)
             if admitted and budget is not None and spent + cost > budget:
-                break  # later steps pick it up; never defer the first
+                # later steps pick it up; never defer the first
+                self.last_refusal = "budget"
+                break
             heapq.heappop(self._heap)
             spent += cost
             admitted.append(state)

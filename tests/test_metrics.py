@@ -1,0 +1,318 @@
+"""Serving telemetry tests.
+
+The load-bearing claim is **zero interference**: the metrics facade is a
+host-side observer, so engine outputs are bitwise identical with metrics
+on, off, or logging to a JSONL sink. Around that: the dependency-free
+primitives (exact percentile helpers vs numpy, log-bucket histogram
+error bounds), deterministic request-lifecycle accounting under a
+`FakeClock` (event ordering through chunked+paged admission, queue-wait/
+TTFT/TPOT derived from the monotonic stamps), a counter-conservation
+invariant checked after every step, horizon-waste attribution, and the
+stability of the `snapshot()` schema that operators script against.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import tiny
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from repro.models.quantized import QuantizeConfig, quantize_model
+from repro.serving import (Engine, EngineMetrics, FakeClock, Request,
+                           SamplingParams)
+from repro.serving.metrics import (SCHEMA_VERSION, Gauge, Histogram,
+                                   check_snapshot, pcts_ms, percentiles)
+from repro.serving.request import FINISHED, PREFILLING, QUEUED, RUNNING
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = tiny("dense")
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8))
+    return cfg, ctx, qp
+
+
+def _engine(served, **kw):
+    cfg, ctx, qp = served
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_bucket", 4)
+    return Engine(qp, cfg, ctx, **kw)
+
+
+def _prompts(cfg, rng, n, lo=3, hi=12):
+    return [rng.integers(0, cfg.vocab_size, size=int(s)).tolist()
+            for s in rng.integers(lo, hi, size=n)]
+
+
+# ---------------------------------------------------------------------------
+# primitives: exact percentiles, gauge, log-bucket histogram
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_match_numpy():
+    rng = np.random.default_rng(0)
+    vals = rng.exponential(scale=3.0, size=37).tolist()
+    ps = (0, 10, 25, 50, 90, 99, 100)
+    ours = percentiles(vals, ps)
+    theirs = [float(np.percentile(np.asarray(vals), p)) for p in ps]
+    assert np.allclose(ours, theirs, rtol=1e-12)
+    assert percentiles([], (50, 99)) == [0.0, 0.0]
+    assert percentiles([4.2], (0, 50, 100)) == [4.2, 4.2, 4.2]
+
+
+def test_pcts_ms_schema():
+    r = pcts_ms([0.001, 0.002, 0.003])
+    assert set(r) == {"p50_ms", "p99_ms"}
+    assert r["p50_ms"] == pytest.approx(2.0)
+    assert pcts_ms([]) == {"p50_ms": 0.0, "p99_ms": 0.0}
+
+
+def test_gauge_summary():
+    g = Gauge()
+    assert g.summary() == {"last": None, "min": None, "max": None,
+                           "mean": None, "samples": 0}
+    for v in (1.0, 3.0, 2.0):
+        g.set(v)
+    s = g.summary()
+    assert s == {"last": 2.0, "min": 1.0, "max": 3.0, "mean": 2.0,
+                 "samples": 3}
+
+
+def test_histogram_bucket_bounds_contain_values():
+    h = Histogram(lo=1e-6, hi=1e4, buckets_per_decade=8)
+    rng = np.random.default_rng(1)
+    for v in 10.0 ** rng.uniform(-5.5, 3.5, size=200):
+        i = h._index(v)
+        lo, hi = h.bucket_bounds(i)
+        assert lo <= v < hi * (1 + 1e-12)
+    # out-of-range values clamp to the end buckets instead of dropping
+    assert h._index(1e-9) == 0
+    assert h._index(1e9) == len(h.counts) - 1
+
+
+def test_histogram_percentile_within_one_bucket():
+    """Estimates must land within one bucket growth factor (~33% at
+    8/decade) of the exact order statistic, and p0/p100 are exact."""
+    h = Histogram(buckets_per_decade=8)
+    rng = np.random.default_rng(2)
+    vals = (10.0 ** rng.uniform(-4, 1, size=500)).tolist()
+    for v in vals:
+        h.record(v)
+    g = h._g * 1.01  # one bucket of slack, plus float fuzz
+    for p in (1, 10, 50, 90, 99):
+        exact = float(np.percentile(np.asarray(vals), p))
+        est = h.percentile(p)
+        assert exact / g <= est <= exact * g, (p, exact, est)
+    assert h.percentile(0) == pytest.approx(min(vals))
+    assert h.percentile(100) == pytest.approx(max(vals))
+    s = h.summary()
+    assert s["count"] == 500
+    assert s["mean"] == pytest.approx(float(np.mean(vals)))
+
+
+def test_histogram_degenerate_cases():
+    h = Histogram()
+    assert h.percentile(50) == 0.0  # empty
+    h.record(0.0421)
+    for p in (0, 50, 100):
+        assert h.percentile(p) == pytest.approx(0.0421)  # clamped exact
+    assert h.summary()["min"] == h.summary()["max"] == 0.0421
+
+
+# ---------------------------------------------------------------------------
+# lifecycle accounting: chunked+paged admission under a fake clock
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_events_and_latency_chunked_paged(served, tmp_path):
+    """6 requests (prompts long enough to chunk) through a 2-slot
+    chunked+paged engine on a FakeClock: the JSONL sink must show each
+    request's events in lifecycle order with non-decreasing monotonic
+    stamps, and the snapshot's queue-wait/TTFT/TPOT histograms must agree
+    exactly with the per-request monotonic stamps."""
+    cfg, _, _ = served
+    log = tmp_path / "events.jsonl"
+    clk = FakeClock()
+    mx = EngineMetrics(clock=clk, log_path=str(log))
+    eng = _engine(served, prefill_chunk=4, kv_block_size=8,
+                  clock=clk, metrics=mx)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, rng, 6, lo=6, hi=12)
+    states = [eng.submit(Request(prompt=tuple(p), max_new_tokens=4))
+              for p in prompts]
+    while eng.has_work():
+        eng.step()
+        clk.advance(0.5)
+
+    events = [json.loads(line) for line in log.read_text().splitlines()]
+    assert all({"t", "t_wall", "event"} <= set(e) for e in events)
+    stamps = [e["t"] for e in events]
+    assert stamps == sorted(stamps)  # monotonic clock, append order
+
+    order = {"submit": 0, "admit": 1, "prefill_chunk": 2, "first_token": 3,
+             "retire": 4}
+    for st in states:
+        seq = [e["event"] for e in events
+               if e.get("request_id") == st.request_id]
+        assert seq[0] == "submit" and seq[-1] == "retire"
+        assert [order[n] for n in seq] == sorted(order[n] for n in seq)
+        n_chunks = seq.count("prefill_chunk")
+        assert n_chunks == -(-len(st.request.prompt) // 4)  # every chunk
+        assert seq.count("admit") == seq.count("first_token") == 1
+
+    snap = eng.metrics.snapshot()
+    assert check_snapshot(snap) == []
+    waits = [s.admit_t - s.submit_t for s in states]
+    ttfts = [s.first_token_t - s.submit_t for s in states]
+    tpots = [(s.finish_t - s.first_token_t) / (len(s.tokens) - 1)
+             for s in states]
+    for name, vals in (("queue_wait", waits), ("ttft", ttfts),
+                       ("tpot", tpots)):
+        h = snap["latency_s"][name]
+        assert h["count"] == len(states)
+        assert h["min"] == pytest.approx(min(vals))
+        assert h["max"] == pytest.approx(max(vals))
+    c = snap["counters"]
+    assert c["prefill_chunks"] == sum(-(-len(p) // 4) for p in prompts)
+    assert c["blocked_on_slots"] > 0  # 6 requests queued behind 2 slots
+    assert c["finished"] == c["finished_length"] == 6
+    assert c["tokens_out"] == c["tokens_finished"] == 24
+    # monotonic submit stamps never go backwards even if wall clock would
+    assert all(s.submit_t <= s.admit_t <= s.first_token_t <= s.finish_t
+               for s in states)
+    mx.close()
+
+
+def test_counter_conservation_every_step(served):
+    """At every step: submitted == queued + in-flight + finished, and the
+    admitted counter covers exactly the requests that left the queue."""
+    cfg, _, _ = served
+    clk = FakeClock()
+    eng = _engine(served, clock=clk)
+    rng = np.random.default_rng(4)
+    prompts = _prompts(cfg, rng, 6)
+    gens = [int(g) for g in rng.integers(2, 7, size=6)]
+    states = [eng.submit(Request(prompt=tuple(p), max_new_tokens=g))
+              for p, g in zip(prompts, gens)]
+    c = eng.metrics.counters
+    assert c["submitted"] == 6 and c["admitted"] == 0
+    while eng.has_work():
+        eng.step()
+        clk.advance(0.25)
+        by = {s: 0 for s in (QUEUED, PREFILLING, RUNNING, FINISHED)}
+        for st in states:
+            by[st.status] += 1
+        assert c["submitted"] == sum(by.values()) == 6
+        assert c["finished"] == by[FINISHED]
+        assert c["admitted"] == 6 - by[QUEUED]
+        assert c["tokens_out"] == sum(len(s.tokens) for s in states)
+        assert len(eng.scheduler) == by[QUEUED]
+    assert c["finished"] == 6
+    assert c["tokens_finished"] == c["tokens_out"] == sum(gens)
+    snap = eng.metrics.snapshot()
+    assert snap["gauges"]["queue_depth"]["last"] == 0.0
+    assert snap["gauges"]["slot_occupancy"]["max"] <= 1.0
+    # unpaged engine: the free-blocks gauge is never sampled
+    assert snap["gauges"]["free_blocks"]["samples"] == 0
+
+
+def test_horizon_waste_accounting(served):
+    """A request finishing mid-horizon strands H-1-h slot-steps: with
+    H=4, a 5-token budget retires at h=0 of its second block (waste 3), a
+    4-token budget exactly fills one block (waste 0)."""
+    for max_new, expect in ((5, 3), (4, 0)):
+        eng = _engine(served, step_horizon=4)
+        eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=max_new))
+        eng.run()
+        assert eng.metrics.counters["horizon_waste_steps"] == expect
+
+
+# ---------------------------------------------------------------------------
+# zero interference: metrics cannot change a token
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_zero_interference_bitwise(served, tmp_path):
+    """The same ragged greedy+sampled workload through metrics-on,
+    metrics-off, and JSONL-logging engines must produce bitwise identical
+    token streams — telemetry is a host-side observer."""
+    cfg, _, _ = served
+
+    def outputs(**eng_kw):
+        eng = _engine(served, **eng_kw)
+        rng = np.random.default_rng(5)
+        states = []
+        for i, p in enumerate(_prompts(cfg, rng, 5)):
+            sampling = SamplingParams(greedy=(i % 2 == 0), temperature=0.9,
+                                      top_k=16, seed=i)
+            states.append(eng.submit(Request(
+                prompt=tuple(p), max_new_tokens=int(rng.integers(2, 7)),
+                sampling=sampling)))
+        eng.run()
+        return [s.output() for s in states]
+
+    on = outputs()
+    off = outputs(metrics=False)
+    logged = outputs(metrics=EngineMetrics(
+        log_path=str(tmp_path / "zi.jsonl")))
+    assert on == off == logged
+
+
+def test_disabled_metrics_hooks_are_inert(served):
+    """metrics=False engines still expose a facade with a schema-clean
+    (all-zero) snapshot, so operator code never branches."""
+    eng = _engine(served, metrics=False)
+    eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=3))
+    eng.run()
+    assert not eng.metrics.enabled
+    snap = eng.metrics.snapshot()
+    assert check_snapshot(snap) == []
+    assert snap["counters"]["submitted"] == 0
+    assert snap["elapsed_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# snapshot schema stability
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_schema_and_json_round_trip():
+    clk = FakeClock()
+    mx = EngineMetrics(clock=clk)
+    mx.count("steps")
+    mx.latency["ttft"].record(0.05)
+    mx.sample_step(queue_depth=3, running=2, n_slots=4, free_blocks=7)
+    clk.advance(1.0)
+    snap = mx.snapshot()
+    assert check_snapshot(snap) == []
+    assert snap["schema_version"] == SCHEMA_VERSION
+    assert snap["elapsed_s"] == pytest.approx(1.0)
+    assert json.loads(mx.to_json()) == snap
+
+
+def test_check_snapshot_flags_drift():
+    snap = EngineMetrics(clock=FakeClock()).snapshot()
+    assert check_snapshot(snap) == []
+
+    missing = json.loads(json.dumps(snap))
+    del missing["counters"]["steps"]
+    assert any("counters.steps: missing" in p for p in check_snapshot(missing))
+
+    extra = json.loads(json.dumps(snap))
+    extra["latency_s"]["ttft"]["p75"] = 0.0
+    assert any("unexpected field" in p for p in check_snapshot(extra))
+
+    renamed = json.loads(json.dumps(snap))
+    renamed["gauges"]["queue_len"] = renamed["gauges"].pop("queue_depth")
+    assert len(check_snapshot(renamed)) >= 2  # missing + unexpected
+
+    stale = json.loads(json.dumps(snap))
+    stale["schema_version"] = SCHEMA_VERSION + 1
+    assert any("schema_version" in p for p in check_snapshot(stale))
