@@ -48,7 +48,19 @@ trajectory is tracked PR over PR:
    the chunk accounting and pool drain are gated too
    (`chunked_paged_smoke_run`; gate ``serving_chunked_paged``).
 
-5. **Metrics overhead + snapshot schema** (runs even with ``--no-smoke``,
+5. **Optimistic overcommit vs worst-case reservation** (deterministic
+   model + real-engine exactness check; both run even with
+   ``--no-smoke``): on a heavy-tailed workload — every request *claims*
+   a long budget, most stop far short — the reservation baseline's peak
+   concurrency is bounded by the claims while optimistic admission with
+   preempt-and-requeue is bounded by tokens actually written. Gates:
+   modeled optimistic peak **>= 1.3x** the reservation baseline
+   (``serving_overcommit_concurrency``), and a churning real engine
+   (undersized pool + ``overcommit=True``, preemptions forced) must emit
+   **bitwise identical** token streams to a sequential no-churn engine
+   (``serving_preempt_exactness`` — preemption is invisible in outputs).
+
+6. **Metrics overhead + snapshot schema** (runs even with ``--no-smoke``,
    so ``run.py --check`` gates it): the same workload through a
    metrics-on and a metrics-off engine. Outputs must be bitwise identical
    (telemetry is a host-side observer — it must never perturb the device
@@ -95,9 +107,21 @@ ARRIVAL_SCALE = 1.0  # mean inter-arrival, in decode steps (Poisson process)
 SMOKE_SLACK = 0.6
 # telemetry must be ~free: metrics-on min-of-N wall-clock within 5% of
 # metrics-off (min-of-N because container noise is one-sided — slowdowns,
-# never speedups)
+# never speedups; the drain is a few hundred ms — see
+# metrics_overhead_run — so N=5 pushes the min well under the
+# container's few-ms jitter)
 METRICS_OVERHEAD_TOL = 0.05
-METRICS_REPS = 3
+METRICS_REPS = 8
+# overcommit scenario: heavy-tailed claims (every request *claims* a long
+# budget, most stop far short of it) against a pool sized so worst-case
+# reservation serializes. Optimistic admission must model >= 1.3x the
+# reservation baseline's peak concurrency.
+N_HEAVY = 24
+HEAVY_CLAIM = 64
+# sized so the sim also crosses the eviction path: all N_HEAVY prefill
+# extents fit exactly, the first long request's growth forces a preempt
+OVERCOMMIT_BUDGET = 3 * SLOTS * MAX_LEN // 8
+OVERCOMMIT_GAIN_MIN = 1.3
 
 
 def make_workload(seed: int = SEED, n: int = N_REQ):
@@ -369,14 +393,181 @@ def chunked_paged_smoke_run(print_fn=print) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# 1c) telemetry: zero-interference + overhead + snapshot schema
+# 1c) optimistic overcommit vs worst-case reservation
+# ---------------------------------------------------------------------------
+
+
+def make_heavy_tailed_workload(seed: int = SEED + 11, n: int = N_HEAVY):
+    """The workload worst-case reservation is worst at: every request
+    *claims* ``HEAVY_CLAIM`` new tokens (the API budget), but actual
+    generation is heavy-tailed — most stop within a handful of tokens
+    (EOS), only ~20% run the full claim. Reservation admission pays for
+    the claim; optimistic admission pays for the tokens written. Prompt
+    extents land on a block boundary, so a row's first generated token
+    already needs a fresh block — growth races release from step one
+    and the model's eviction path is actually exercised."""
+    rng = np.random.default_rng(seed)
+    plens = np.full(n, 14, int)
+    claims = np.full(n, HEAVY_CLAIM, int)
+    long_mask = rng.random(n) < 0.2
+    actual = np.where(long_mask, claims, rng.integers(2, 9, size=n))
+    return plens, claims, actual.astype(int)
+
+
+def modeled_overcommit_concurrency(
+        plens, claims, actual, *, budget_tokens: int = OVERCOMMIT_BUDGET,
+        block: int = KV_BLOCK, bucket: int = PAGED_BUCKET,
+        horizon: int = PAGED_HORIZON) -> dict:
+    """Peak concurrency under one block budget, reservation vs optimistic.
+
+    Baseline (worst-case reservation): each request reserves
+    ceil(need(prompt, claim) / block) blocks up front — the engine's
+    conservative paged admission — packed greedily FIFO until the pool is
+    dry. Optimistic: a step-granular simulation where a row holds blocks
+    only for tokens actually written; when a row's next token needs a
+    block and none is free, the youngest row is evicted (its blocks
+    return, it requeues at its original position and recomputes) — the
+    engine's preempt-and-requeue policy. The deterministic CI gate:
+    optimistic peak concurrency >= ``OVERCOMMIT_GAIN_MIN`` x baseline."""
+    def need(L, g):
+        extent = -(-int(L) // bucket) * bucket
+        extent = -(-extent // block) * block
+        return max(extent, int(L) + int(g) + horizon - 1)
+
+    def blocks(tokens):
+        return -(-int(tokens) // block)
+
+    total = budget_tokens // block
+
+    used = reserved_peak = 0
+    for L, c in zip(plens, claims):
+        nb = blocks(need(L, c))
+        if used + nb > total:
+            break
+        used += nb
+        reserved_peak += 1
+
+    # optimistic step sim: FIFO admission on the prefill extent, one token
+    # per active row per step, evict-youngest on allocation failure
+    n = len(plens)
+    todo = list(range(n))
+    pos: dict[int, int] = {}   # id -> tokens held (admission order = age)
+    done: set[int] = set()
+    free = total
+    peak = evictions = recompute_tokens = 0
+    while len(done) < n:
+        while todo:
+            i = todo[0]
+            ext = -(-int(plens[i]) // bucket) * bucket
+            if blocks(ext) > free:
+                break
+            todo.pop(0)
+            pos[i] = ext
+            free -= blocks(ext)
+        peak = max(peak, len(pos))
+        for i in list(pos):
+            if i not in pos:
+                continue  # evicted mid-step by an earlier row's growth
+            target = int(plens[i]) + int(actual[i])
+            if pos[i] >= target:
+                free += blocks(pos[i])
+                del pos[i]
+                done.add(i)
+                continue
+            if blocks(pos[i] + 1) > blocks(pos[i]) and free == 0:
+                victim = max(pos)  # youngest admitted (FIFO ids)
+                free += blocks(pos[victim])
+                recompute_tokens += pos[victim]
+                del pos[victim]
+                todo.insert(0, victim)
+                evictions += 1
+                if victim == i:
+                    continue
+            pos[i] += 1
+            if blocks(pos[i]) > blocks(pos[i] - 1):
+                free -= 1
+
+    return {
+        "budget_tokens": budget_tokens,
+        "total_blocks": total,
+        "reserved_peak_concurrency": reserved_peak,
+        "optimistic_peak_concurrency": peak,
+        "evictions": evictions,
+        "recompute_tokens": recompute_tokens,
+        "concurrency_gain": peak / max(reserved_peak, 1),
+        "gain_min": OVERCOMMIT_GAIN_MIN,
+    }
+
+
+def preempt_exactness_run(print_fn=print) -> dict:
+    """Preemption must be invisible in the token streams: the same
+    requests through a churning engine (undersized pool + overcommit, so
+    rows are evicted mid-generation and resumed by replay) and through a
+    sequential no-churn engine (one slot, ample pool — each request runs
+    alone). Outputs must be **bitwise identical** — greedy and sampled
+    streams both — and the churn engine must have actually preempted
+    (otherwise the gate is vacuous). Deterministic, so it runs even with
+    ``--no-smoke`` and gates ``run.py --check``
+    (``serving_preempt_exactness``)."""
+    from repro.launch.serve import Server
+    from repro.serving import Request, SamplingParams
+
+    server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
+    rng = np.random.default_rng(SEED + 12)
+    reqs = []
+    for i in range(8):
+        p = tuple(int(t) for t in
+                  rng.integers(0, server.cfg.vocab_size,
+                               size=int(rng.integers(8, 21))))
+        sampling = SamplingParams(greedy=False, temperature=0.8, top_k=8,
+                                  seed=200 + i) if i % 3 == 0 \
+            else SamplingParams()
+        reqs.append(Request(prompt=p, max_new_tokens=int(rng.integers(8, 15)),
+                            sampling=sampling))
+
+    def drain(engine):
+        states = [engine.submit(r) for r in reqs]
+        engine.run()
+        return [st.output() for st in states]
+
+    kw = dict(fresh=True, prefill_bucket=PAGED_BUCKET,
+              step_horizon=PAGED_HORIZON, prefill_chunk=PAGED_BUCKET,
+              kv_block_size=KV_BLOCK)
+    churn_eng = server.engine(n_slots=4, kv_pool_tokens=3 * KV_BLOCK,
+                              overcommit=True, **kw)
+    churn_outs = drain(churn_eng)
+    churn_stats = dict(churn_eng.stats)
+    solo_outs = drain(server.engine(n_slots=1,
+                                    kv_pool_tokens=8 * KV_BLOCK, **kw))
+    r = {
+        "outputs_match": churn_outs == solo_outs,
+        "preemptions": churn_stats["preemptions"],
+        "replayed_tokens": churn_stats["replayed_tokens"],
+        "pool": churn_eng.pool.stats(),
+        "churned": churn_stats["preemptions"] > 0,
+    }
+    r["ok"] = r["outputs_match"] and r["churned"]
+    print_fn(f"serving_preempt_exactness,"
+             f"preemptions={r['preemptions']},"
+             f"replayed={r['replayed_tokens']},"
+             f"outputs_match={r['outputs_match']},"
+             f"{'PASS' if r['ok'] else 'FAIL'}")
+    return r
+
+
+# ---------------------------------------------------------------------------
+# 1d) telemetry: zero-interference + overhead + snapshot schema
 # ---------------------------------------------------------------------------
 
 
 def metrics_overhead_run(print_fn=print, reps: int = METRICS_REPS) -> dict:
-    """Telemetry must be free: the same short workload through a
-    metrics-on and a metrics-off engine (same quantized model, paged pool,
-    chunked prefill — the fully-loaded configuration, so every hook fires).
+    """Telemetry must be free: the same workload through a metrics-on and
+    a metrics-off engine (same quantized model, paged pool, chunked
+    prefill — the fully-loaded configuration, so every hook fires). The
+    workload is a longer variant of the short one (twice the requests,
+    ~20-token budgets) so each drain is a few hundred ms — long enough
+    that the container's few-ms scheduling jitter cannot swing the
+    relative comparison across the tolerance.
 
     Gated here, and by ``run.py --check`` (this section runs even with
     ``--no-smoke``):
@@ -394,9 +585,10 @@ def metrics_overhead_run(print_fn=print, reps: int = METRICS_REPS) -> dict:
     from repro.serving import Request
     from repro.serving.metrics import check_snapshot
 
-    plens, gens = make_short_workload()
     server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
     rng = np.random.default_rng(SEED + 10)
+    plens = np.full(N_SHORT * 2, 8, int)
+    gens = rng.integers(16, 25, size=N_SHORT * 2).astype(int)
     prompts = [rng.integers(0, server.cfg.vocab_size, size=int(L)).tolist()
                for L in plens]
 
@@ -595,6 +787,28 @@ def run(print_fn=print, smoke: bool = True,
              f"stranded_slot_tokens={pm['slot_stranded_tokens']},"
              f"{'PASS' if paged_ok else 'FAIL'}")
 
+    # optimistic overcommit vs worst-case reservation (deterministic):
+    # heavy-tailed claims, the scenario the preempt-and-requeue engine
+    # exists for
+    hp, hc, ha = make_heavy_tailed_workload()
+    oc = modeled_overcommit_concurrency(hp, hc, ha)
+    results["overcommit_modeled"] = oc
+    oc_ok = oc["concurrency_gain"] >= OVERCOMMIT_GAIN_MIN
+    results["overcommit_concurrency_ok"] = oc_ok
+    print_fn(f"serving_overcommit_model,"
+             f"reserved_peak={oc['reserved_peak_concurrency']},"
+             f"optimistic_peak={oc['optimistic_peak_concurrency']},"
+             f"gain={oc['concurrency_gain']:.2f}x,"
+             f"evictions={oc['evictions']},"
+             f"{'PASS' if oc_ok else 'FAIL'}")
+
+    # preemption exactness (real engines, deterministic token equality):
+    # runs even without smoke so --check catches a resume-replay
+    # regression before it ships
+    pe = preempt_exactness_run(print_fn)
+    results["preempt_exactness"] = pe
+    results["preempt_exactness_ok"] = pe["ok"]
+
     # telemetry gates run even without smoke: bitwise zero-interference
     # and the snapshot schema are deterministic, and --check (smoke=False)
     # must catch an instrumentation regression before it ships
@@ -636,6 +850,7 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
     r = run(smoke=not args.no_smoke, out_path=args.out)
     ok = (r["modeled_speedup_ok"] and r["paged_concurrency_ok"]
+          and r["overcommit_concurrency_ok"] and r["preempt_exactness_ok"]
           and r["metrics_overhead_ok"] and r["metrics_schema_ok"]
           and r.get("smoke_speedup_ok", True)
           and r.get("paged_smoke_ok", True)

@@ -68,7 +68,10 @@ def serving_section(smoke: bool, section=None) -> list[str]:
     wall-clock on the tiny model and the real paged engine must beat the
     real slot engine's peak concurrency — with bitwise-matching outputs
     off-TPU (on TPU the two paths pick different attention tile sizes,
-    so only the concurrency half gates; see bench_serving). The telemetry
+    so only the concurrency half gates; see bench_serving). The overcommit
+    gates (optimistic admission >= 1.3x the worst-case-reservation
+    baseline's modeled peak concurrency; preempt-and-requeue bitwise
+    invisible in a real churning engine's outputs) and the telemetry
     gates (metrics-on bitwise-equal and within tolerance of metrics-off;
     snapshot schema stable) run smoke or not, so --check catches
     instrumentation regressions too.
@@ -105,9 +108,19 @@ def serving_section(smoke: bool, section=None) -> list[str]:
     # and the one-shot engine (deterministic token equality, off-TPU)
     if smoke and not r.get("chunked_paged_ok", True):
         failures.append("serving_chunked_paged")
+    # overcommit gates run smoke or not (deterministic): optimistic
+    # admission must model >= 1.3x the worst-case-reservation baseline's
+    # peak concurrency on the heavy-tailed workload, and a churning
+    # overcommit engine must emit bitwise the same streams as a no-churn
+    # sequential run — preempt-and-requeue must be invisible in outputs
+    # (see bench_serving §5)
+    if not r.get("overcommit_concurrency_ok", True):
+        failures.append("serving_overcommit_concurrency")
+    if not r.get("preempt_exactness_ok", True):
+        failures.append("serving_preempt_exactness")
     # telemetry gates run smoke or not: metrics-on must produce bitwise
     # outputs and stay within tolerance of metrics-off wall-clock, and the
-    # operator snapshot must keep its schema (see bench_serving §5)
+    # operator snapshot must keep its schema (see bench_serving §6)
     if not r.get("metrics_overhead_ok", True):
         failures.append("serving_metrics_overhead")
     if not r.get("metrics_schema_ok", True):

@@ -5,7 +5,10 @@
 carries per-request sampling parameters and the streamed token buffer;
 `paged.BlockPool` replaces contiguous cache rows with block-granular paged
 allocation (``Engine(kv_block_size=...)``) so admission is bounded by
-actual tokens, not worst-case request length; `metrics.EngineMetrics` is
+actual tokens, not worst-case request length — and
+``Engine(overcommit=True)`` drops even the worst-case reservation for
+optimistic per-token allocation with preempt-and-requeue (deterministic
+replay resume) as the safety valve; `metrics.EngineMetrics` is
 the telemetry facade every engine carries (`Engine.metrics.snapshot()` —
 TTFT/TPOT/e2e percentiles, occupancy and free-block gauges, backpressure
 and horizon-waste counters, host/prefill/device phase timing).
@@ -13,9 +16,10 @@ and horizon-waste counters, host/prefill/device phase timing).
 
 from repro.serving.engine import Engine
 from repro.serving.metrics import EngineMetrics, FakeClock
-from repro.serving.paged import BlockPool
+from repro.serving.paged import BlockPool, PoolExhausted
 from repro.serving.request import Request, RequestState, SamplingParams
 from repro.serving.scheduler import Scheduler
 
-__all__ = ["BlockPool", "Engine", "EngineMetrics", "FakeClock", "Request",
-           "RequestState", "SamplingParams", "Scheduler"]
+__all__ = ["BlockPool", "Engine", "EngineMetrics", "FakeClock",
+           "PoolExhausted", "Request", "RequestState", "SamplingParams",
+           "Scheduler"]

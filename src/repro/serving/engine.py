@@ -90,9 +90,50 @@ the tests pin; a TPU run whose tuner picks different block_s for pool
 pages vs contiguous rows is numerically, not bitwise, equivalent) — and
 the one-transfer-per-step discipline holds: block tables are
 tiny int32 host→device uploads on block events, and the step's single
-device→host transfer is still the stacked-token block. Worst-case
-reservation keeps the no-preemption engine deadlock-free; optimistic
-overcommit arrives with preemption/swapping (ROADMAP).
+device→host transfer is still the stacked-token block. By default the
+worst-case reservation keeps admission deadlock-free without preemption;
+``overcommit=True`` replaces it with optimistic allocation (below).
+
+Preemption & optimistic overcommit (``overcommit=True``, paged only)
+--------------------------------------------------------------------
+
+Worst-case reservation prices every request at its *budget* (prompt +
+``max_new_tokens``), but heavy-tailed traffic mostly stops early — the
+reserved tail is dead capacity. ``overcommit=True`` switches the pool to
+optimistic mode: admission gates only on the blocks the prefill extent
+needs *right now*, blocks are allocated strictly on demand, and when the
+free list runs dry at a decode or chunk frontier (`PoolExhausted`), the
+engine **preempts** a victim instead of failing:
+
+* **Victim policy**: the lowest-priority, youngest-arrival occupied slot
+  (RUNNING or PREFILLING). The highest-priority oldest occupied row is
+  *protected* — never chosen — so some row always runs to completion
+  (no deadlock). Rows that already hit ``preempt_limit`` evictions are
+  passed over while any other candidate exists (bounded per-request
+  preemption, no starvation); the demanding row itself is a legal victim
+  (it simply re-queues and the step goes on without it).
+* **Eviction** releases every pool block the victim holds back to the
+  free list in the same host step (each block is held by exactly one
+  slot, so this can never free another request's memory), snapshots its
+  emitted tokens, and re-queues it at its **original** (priority,
+  arrival) position — preemption never demotes a request behind later
+  traffic.
+* **Resume is deterministic replay, not re-prefill of the generated
+  prefix.** The generated tokens' KV was written through the quantized
+  decode path; re-prefilling them would re-quantize prefill-regime
+  hidden states and can diverge (measurably — see
+  ``tests/test_serving_engine.py``). Instead, re-admission re-prefills
+  the *original prompt* — bitwise the same computation as the first
+  admission — and lets the ordinary decode path regenerate the snapshot:
+  the per-request PRNG is indexed by sample count starting at 0 again,
+  so every replayed sample sees identical logits and keys and the row
+  re-derives its own history exactly. The host suppresses emission until
+  the replay drains (``RequestState.replay_left``), so clients never see
+  a duplicate or altered token and the resumed stream is bitwise
+  identical to an uninterrupted run. The cost is recompute
+  (prompt + snapshot re-decoded), surfaced as the
+  ``resume_prefill_tokens`` counter against the concurrency overcommit
+  buys (``bench_serving`` gates the trade ≥ 1.3x).
 
 Observability
 -------------
@@ -127,10 +168,12 @@ from repro.kernels import ops as kops
 from repro.models import lm
 from repro.models.blocks import ModelContext
 from repro.serving.metrics import EngineMetrics
-from repro.serving.paged import BlockPool, init_paged_cache
+from repro.serving.paged import BlockPool, PoolExhausted, init_paged_cache
 from repro.serving.request import (
     FINISHED,
+    PREEMPTED,
     PREFILLING,
+    QUEUED,
     RUNNING,
     Request,
     RequestState,
@@ -153,6 +196,8 @@ class Engine:
                  step_horizon: int = 1,
                  kv_block_size: Optional[int] = None,
                  kv_pool_tokens: Optional[int] = None,
+                 overcommit: bool = False,
+                 preempt_limit: int = 8,
                  base_seed: int = 0,
                  clock: Optional[callable] = None,
                  metrics: Union[bool, EngineMetrics, None] = None):
@@ -166,6 +211,15 @@ class Engine:
                 f"(dense/moe), got {cfg.family!r}")
         if step_horizon < 1:
             raise ValueError(f"step_horizon must be >= 1, got {step_horizon}")
+        if overcommit and kv_block_size is None:
+            raise ValueError(
+                "overcommit=True needs a paged pool (pass kv_block_size): "
+                "slot rows have nothing to overcommit")
+        if preempt_limit < 1:
+            raise ValueError(
+                f"preempt_limit must be >= 1, got {preempt_limit}")
+        self.overcommit = bool(overcommit)
+        self.preempt_limit = preempt_limit
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.n_slots, self.max_len = n_slots, max_len
         # not `scheduler or ...`: an empty Scheduler is len()==0-falsy
@@ -206,7 +260,8 @@ class Engine:
                     f"kv_block_size ({kv_block_size})")
             self.pool = BlockPool(pool_tokens // kv_block_size,
                                   kv_block_size, n_slots=n_slots,
-                                  max_blocks=max_len // kv_block_size)
+                                  max_blocks=max_len // kv_block_size,
+                                  optimistic=self.overcommit)
             self.cache = init_paged_cache(cfg, self.pool)
         else:
             if kv_pool_tokens is not None:
@@ -240,7 +295,8 @@ class Engine:
         self.stats = {"steps": 0, "device_steps": 0, "transfers": 0,
                       "occupancy_sum": 0.0, "tokens_out": 0,
                       "admitted": 0, "finished": 0, "prefill_chunks": 0,
-                      "peak_running": 0, "horizon": step_horizon}
+                      "peak_running": 0, "horizon": step_horizon,
+                      "preemptions": 0, "replayed_tokens": 0}
 
         # params are engine-constant: captured in the jit closures so the
         # (large) param tree is never flattened/hashed per call; `sample`
@@ -551,7 +607,22 @@ class Engine:
             H = self._pending.shape[0]
             for slot, st in self._pending_slots:
                 for h in range(H):
-                    st.tokens.append(int(self._pending[h, slot, 0]))
+                    t = int(self._pending[h, slot, 0])
+                    if st.replay_left > 0:
+                        # deterministic replay of a resumed request: the
+                        # decode path just re-derived a token the client
+                        # already has — verify and drop the duplicate
+                        expect = st.tokens[len(st.tokens) - st.replay_left]
+                        if t != expect:
+                            raise RuntimeError(
+                                f"resume replay diverged for request "
+                                f"{st.request_id}: re-derived {t}, snapshot "
+                                f"has {expect} — decode replay must be "
+                                "bitwise deterministic for overcommit")
+                        st.replay_left -= 1
+                        self.stats["replayed_tokens"] += 1
+                        continue
+                    st.tokens.append(t)
                     st.token_times.append(now)
                     self.stats["tokens_out"] += 1
                     mx.count("tokens_out")
@@ -581,13 +652,25 @@ class Engine:
             can_admit = None
             if self.pool is not None:
                 tentative = {"blocks": 0}
-
-                def can_admit(st, _t=tentative):
-                    nb = self.pool.blocks_for(self._need_tokens(st.request))
-                    if self.pool.can_reserve(_t["blocks"] + nb):
-                        _t["blocks"] += nb
-                        return True
-                    return False
+                if self.overcommit:
+                    # optimistic: price a request at the blocks its
+                    # prefill extent touches *now*, not its worst case —
+                    # the decode frontier preempts if the bet goes bad
+                    def can_admit(st, _t=tentative):
+                        nb = self.pool.blocks_for(
+                            self._prefill_extent(st.prompt_len))
+                        if self.pool.can_alloc(_t["blocks"] + nb):
+                            _t["blocks"] += nb
+                            return True
+                        return False
+                else:
+                    def can_admit(st, _t=tentative):
+                        nb = self.pool.blocks_for(
+                            self._need_tokens(st.request))
+                        if self.pool.can_reserve(_t["blocks"] + nb):
+                            _t["blocks"] += nb
+                            return True
+                        return False
 
             admits = self.scheduler.pop_admissions(len(free),
                                                    self.prefill_chunk,
@@ -599,12 +682,18 @@ class Engine:
                 st.admit_t = self.clock()
                 self._slots[slot] = st
                 self._set_row_params(slot, st)
-                if self.pool is not None:
+                if self.pool is not None and not self.overcommit:
                     self.pool.reserve(
                         slot,
                         self.pool.blocks_for(self._need_tokens(st.request)))
                 self.stats["admitted"] += 1
                 mx.on_admit(st)
+                if st.status == PREEMPTED:
+                    # resume = replay: re-prefill the original prompt and
+                    # re-decode the snapshot before emitting anything new
+                    st.replay_left = len(st.tokens)
+                    mx.on_resume(st, st.prompt_len + len(st.tokens))
+                st.status = QUEUED  # normalized below to PREFILLING/RUNNING
                 if self.prefill_chunk is not None \
                         and st.prompt_len > self.prefill_chunk:
                     st.status = PREFILLING
@@ -641,20 +730,28 @@ class Engine:
         # then the block's ONE device→host transfer
         running = [(i, s) for i, s in enumerate(self._slots)
                    if s is not None and s.status == RUNNING]
+        if running and self.pool is not None:
+            # alloc-on-demand: map every block the horizon's writes can
+            # touch (positions pos .. pos+H-1) before the compiled step
+            # runs. Conservative mode: within-reservation, can never
+            # fail. Overcommit: an exhausted free list preempts a victim
+            # (possibly this very row) and retries.
+            bs = self.pool.block_size
+            for slot, st in running:
+                if self._slots[slot] is not st:
+                    continue  # already evicted as a victim this step
+                n = -(-(int(self._pos[slot]) + self.step_horizon) // bs)
+                if self.overcommit:
+                    self._ensure_evicting(slot, n)
+                elif self.pool.ensure(slot, n):
+                    self._dirty = True
+            running = [(i, s) for i, s in enumerate(self._slots)
+                       if s is not None and s.status == RUNNING]
         mx.sample_step(
             queue_depth=len(self.scheduler), running=len(running),
             n_slots=self.n_slots,
             free_blocks=None if self.pool is None else self.pool.free_blocks)
         if running:
-            if self.pool is not None:
-                # alloc-on-demand: map every block the horizon's writes
-                # can touch (positions pos .. pos+H-1) before the compiled
-                # step runs — within-reservation, so this can never fail
-                bs = self.pool.block_size
-                for slot, _ in running:
-                    n = -(-(int(self._pos[slot]) + self.step_horizon) // bs)
-                    if self.pool.ensure(slot, n):
-                        self._dirty = True
             if self._dirty:
                 self._push_rows()
                 self._dirty = False
@@ -783,6 +880,20 @@ class Engine:
         L = st.prompt_len
         start = st.prefill_pos
         end = min(start + chunk, L)
+        bt = None
+        if self.pool is not None:
+            # pre-map every block the chunk's writes (and the kernel's
+            # clamped reads) can touch before the compiled call. Within
+            # the admission reservation this can never fail; in
+            # overcommit mode an exhausted pool preempts a victim —
+            # possibly this very row, which then skips its chunk.
+            n = -(-(start + chunk) // self.pool.block_size)
+            if self.overcommit:
+                if not self._ensure_evicting(slot, n):
+                    return  # evicted to cover the demand; re-queued
+            elif self.pool.ensure(slot, n):
+                self._dirty = True
+            bt = jnp.asarray(self.pool.table[slot:slot + 1])
         self.metrics.on_prefill_chunk(st, start, end)
         toks = np.zeros((1, chunk), np.int32)
         toks[0, : end - start] = st.request.prompt[start:end]
@@ -790,15 +901,6 @@ class Engine:
         # start .. start+chunk-1 — the static prefix bucket bounds that
         bucket = self._prefix_bucket(start + chunk)
         mid, last = self._chunk_fns(bucket)
-        bt = None
-        if self.pool is not None:
-            # pre-map every block the chunk's writes (and the kernel's
-            # clamped reads) can touch before the compiled call — within
-            # the admission reservation, so this can never fail
-            bs = self.pool.block_size
-            if self.pool.ensure(slot, -(-(start + chunk) // bs)):
-                self._dirty = True
-            bt = jnp.asarray(self.pool.table[slot:slot + 1])
         self.stats["prefill_chunks"] += 1
         if end < L:
             if self.pool is None:
@@ -840,6 +942,70 @@ class Engine:
         self._active[slot] = True
         self._n_sampled[slot] = 1  # the first token was sampled at admit
         self._dirty = True
+
+    def _pick_victim(self) -> Optional[tuple]:
+        """Victim policy for an exhausted pool: the lowest-priority,
+        youngest-arrival occupied slot. The highest-priority *oldest*
+        occupied row is protected (never evicted), so at least one row
+        always runs to completion — the liveness anchor. Rows at the
+        ``preempt_limit`` fairness bound are passed over while any other
+        candidate exists. Returns (slot, state) or None (nothing
+        evictable: at most one occupied row)."""
+        occ = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        if len(occ) < 2:
+            # a lone row's demand always fits: submit() rejected anything
+            # whose worst case exceeds the whole pool
+            return None
+        order = lambda e: (e[1].request.priority, e[1].queue_seq)
+        protected = min(occ, key=order)
+        cand = [e for e in occ if e is not protected]
+        fair = [e for e in cand
+                if e[1].preempt_count < self.preempt_limit]
+        if fair:
+            return max(fair, key=order)
+        # every candidate is over the fairness bound (pathological
+        # pressure): spread the pain — evict the row with the fewest
+        # evictions so no single request absorbs the churn
+        return min(cand, key=lambda e: (e[1].preempt_count,
+                                        -e[1].request.priority,
+                                        -e[1].queue_seq))
+
+    def _preempt(self, slot: int, st: RequestState) -> None:
+        """Evict ``st`` from its slot: reclaim its pool blocks, snapshot
+        its emitted tokens (they stay on the state — clients keep them),
+        and re-queue it at its original (priority, arrival) position for
+        a replay resume."""
+        st.preempt_count += 1
+        freed = 0 if self.pool is None else self.pool.release(slot)
+        self.metrics.on_preempt(st, freed)
+        st.status = PREEMPTED
+        st.slot = -1
+        st.prefill_pos = 0
+        st.replay_left = 0
+        self._slots[slot] = None
+        self._active[slot] = False
+        self._dirty = True
+        self.stats["preemptions"] += 1
+        self.scheduler.requeue(st)
+
+    def _ensure_evicting(self, slot: int, n_logical: int) -> bool:
+        """Overcommit-mode `BlockPool.ensure`: on `PoolExhausted`, preempt
+        a victim and retry until the demand fits. Returns False when the
+        demanding row itself was chosen as the victim (the caller drops
+        it from this step's work); True once the blocks are mapped."""
+        while True:
+            try:
+                if self.pool.ensure(slot, n_logical):
+                    self._dirty = True
+                return True
+            except PoolExhausted:
+                victim = self._pick_victim()
+                if victim is None:
+                    raise  # unreachable: submit() bounds a lone row's need
+                vslot, vst = victim
+                self._preempt(vslot, vst)
+                if vslot == slot:
+                    return False
 
     def _retire(self, slot: int, st: RequestState, reason: str,
                 horizon_waste: int = 0) -> None:

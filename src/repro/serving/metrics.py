@@ -211,6 +211,12 @@ COUNTER_NAMES = (
     "tokens_out", "tokens_finished", "prefill_chunks",
     "blocked_on_slots", "blocked_on_blocks", "blocked_on_budget",
     "horizon_waste_steps", "steps", "device_steps",
+    # preemption / overcommit (schema v2): victims evicted, pool blocks
+    # their eviction returned to the free list, and recompute waste — the
+    # prompt + replay positions a resumed request re-runs before emitting
+    # anything new. resume_prefill_tokens is the price overcommit pays for
+    # its extra concurrency; read it against tokens_out.
+    "preemptions", "blocks_reclaimed", "resume_prefill_tokens",
 )
 
 _HIST_KEYS = ("count", "mean", "min", "max", "p50", "p90", "p99")
@@ -233,7 +239,7 @@ SNAPSHOT_SCHEMA = {
     "throughput": {"tok_s": None, "goodput_tok_s": None},
 }
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2  # v2: + preemptions / blocks_reclaimed / resume_prefill_tokens
 
 
 def check_snapshot(snap: dict) -> list:
@@ -368,6 +374,29 @@ class EngineMetrics:
         self.event("retire", request_id=st.request_id, reason=reason,
                    n_tokens=len(st.tokens), e2e_s=e2e,
                    horizon_waste_steps=int(horizon_waste))
+
+    def on_preempt(self, st, blocks_reclaimed: int) -> None:
+        """A running/prefilling request was evicted from its slot: its
+        pool blocks went back to the free list and it was re-queued with
+        its original priority and arrival order."""
+        if not self.enabled:
+            return
+        self.counters["preemptions"] += 1
+        self.counters["blocks_reclaimed"] += int(blocks_reclaimed)
+        self.event("preempt", request_id=st.request_id, slot=st.slot,
+                   n_tokens=len(st.tokens), preempt_count=st.preempt_count,
+                   blocks_reclaimed=int(blocks_reclaimed))
+
+    def on_resume(self, st, recompute_tokens: int) -> None:
+        """A preempted request was re-admitted; ``recompute_tokens`` is
+        the prompt re-prefill + token replay work it must redo before any
+        new token reaches the client (overcommit's recompute waste)."""
+        if not self.enabled:
+            return
+        self.counters["resume_prefill_tokens"] += int(recompute_tokens)
+        self.event("resume", request_id=st.request_id, slot=st.slot,
+                   recompute_tokens=int(recompute_tokens),
+                   preempt_count=st.preempt_count)
 
     def on_blocked(self, kind: str) -> None:
         """One per engine step spent with queued work that could not be

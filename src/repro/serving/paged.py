@@ -28,14 +28,18 @@ sound:
   block to the free list in the same host step, so a short request's
   memory is reusable the moment it finishes — internal fragmentation is
   bounded by one partial block per live request.
-* **Reservation accounting** keeps the no-preemption engine deadlock-free:
-  admission reserves the request's worst-case block count (prompt extent +
-  generation budget + horizon headroom) and the free list can never be
-  exhausted by a within-reservation demand (``sum(allocated) <=
-  sum(reserved) <= n_blocks``). This is still strictly better than slot
-  rows — a slot row is a ``max_len``-token reservation regardless of the
-  request — it just forgoes optimistic overcommit until the engine can
-  preempt (ROADMAP: preemption/swapping is the next deferred item).
+* **Two admission regimes.** Conservative (default): admission reserves
+  the request's worst-case block count (prompt extent + generation budget
+  + horizon headroom) and the free list can never be exhausted by a
+  within-reservation demand (``sum(allocated) <= sum(reserved) <=
+  n_blocks``) — deadlock-free without preemption. Optimistic
+  (``optimistic=True``, the engine's ``overcommit`` mode): no
+  reservations; blocks are taken strictly on demand and ``ensure`` raises
+  `PoolExhausted` when the free list runs dry, which the engine treats as
+  a preemption trigger (evict a victim, reclaim its blocks, retry) rather
+  than an error. Either way ``sum(allocated) <= n_blocks`` and no block
+  is ever mapped by two live slots — invariants pinned by
+  ``tests/test_pool_properties.py``.
 
 The TRASH block absorbs the compiled step's frozen-row writes: free,
 retired and queued slots still flow through the one compiled decode step
@@ -58,6 +62,13 @@ from repro.configs import ArchConfig
 TRASH = 0
 
 
+class PoolExhausted(RuntimeError):
+    """Optimistic-mode ``ensure`` found the free list too shallow.
+
+    Raised *before* any block is taken (the failed demand is atomic), so
+    the caller can preempt a victim and retry with accounting intact."""
+
+
 class BlockPool:
     """Fixed pool of ``block_size``-token KV blocks + per-slot block tables.
 
@@ -67,7 +78,7 @@ class BlockPool:
     """
 
     def __init__(self, n_blocks: int, block_size: int, *, n_slots: int,
-                 max_blocks: int):
+                 max_blocks: int, optimistic: bool = False):
         if n_blocks < 1:
             raise ValueError(f"need at least one block, got {n_blocks}")
         if block_size < 1:
@@ -76,6 +87,11 @@ class BlockPool:
         self.block_size = block_size
         self.n_slots = n_slots
         self.max_blocks = max_blocks      # table width = max_len // block_size
+        # optimistic: no worst-case reservations; ensure() raises
+        # PoolExhausted (a preemption trigger) instead of relying on
+        # reservation accounting to make failure impossible.
+        self.optimistic = optimistic
+        self.alloc_failures = 0           # PoolExhausted raises, lifetime
         # physical ids are 1..n_blocks; 0 is TRASH. LIFO free list, seeded
         # so the first pop hands out block 1.
         self._free: List[int] = list(range(n_blocks, 0, -1))
@@ -115,13 +131,24 @@ class BlockPool:
         """Would a worst-case reservation of ``n`` blocks fit right now?"""
         return n <= self.n_blocks - self.reserved_blocks
 
+    def can_alloc(self, n: int) -> bool:
+        """Are ``n`` blocks free right now? (optimistic admission gate —
+        no forward-looking guarantee, unlike `can_reserve`)."""
+        return n <= len(self._free)
+
     def held(self, slot: int) -> List[int]:
         return list(self._held[slot])
 
     # -- lifecycle -------------------------------------------------------
 
     def reserve(self, slot: int, n: int) -> None:
-        """Reserve ``n`` blocks worst-case for ``slot`` (at admission)."""
+        """Reserve ``n`` blocks worst-case for ``slot`` (at admission).
+
+        Conservative mode only — an optimistic pool allocates purely on
+        demand and never reserves."""
+        if self.optimistic:
+            raise RuntimeError("reserve() is meaningless on an optimistic "
+                               "pool — admission gates on can_alloc")
         if self._reserved[slot]:
             raise RuntimeError(f"slot {slot} already holds a reservation")
         if n > self.max_blocks:
@@ -138,13 +165,26 @@ class BlockPool:
     def ensure(self, slot: int, n_logical: int) -> bool:
         """Map logical blocks ``0 .. n_logical-1`` of ``slot``, allocating
         from the free list on demand. Returns True if the table changed
-        (the engine re-uploads the device mirror). Within-reservation
-        demands can never fail: ``sum(allocated) <= sum(reserved) <=
-        n_blocks`` keeps the free list deep enough."""
+        (the engine re-uploads the device mirror). Conservative mode:
+        within-reservation demands can never fail (``sum(allocated) <=
+        sum(reserved) <= n_blocks`` keeps the free list deep enough).
+        Optimistic mode: raises `PoolExhausted` — atomically, taking no
+        blocks — when the free list can't cover the demand."""
         held = self._held[slot]
         if n_logical <= len(held):
             return False
-        if n_logical > self._reserved[slot]:
+        if self.optimistic:
+            if n_logical > self.max_blocks:
+                raise ValueError(
+                    f"slot {slot} needs {n_logical} blocks, table width is "
+                    f"{self.max_blocks}")
+            if n_logical - len(held) > len(self._free):
+                self.alloc_failures += 1
+                self.min_free = min(self.min_free, len(self._free))
+                raise PoolExhausted(
+                    f"slot {slot} needs {n_logical - len(held)} more blocks, "
+                    f"{len(self._free)} free — preempt to reclaim")
+        elif n_logical > self._reserved[slot]:
             raise RuntimeError(
                 f"slot {slot} needs {n_logical} blocks but reserved only "
                 f"{int(self._reserved[slot])} — reservation accounting bug")
@@ -156,14 +196,19 @@ class BlockPool:
         self.min_free = min(self.min_free, len(self._free))
         return True
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int) -> int:
         """Free every block ``slot`` holds and drop its reservation (at
-        retirement). The table row snaps back to TRASH so the retired
-        row's frozen garbage write can never land in a reused block."""
+        retirement or preemption). The table row snaps back to TRASH so
+        the row's frozen garbage write can never land in a reused block.
+        Returns the number of blocks reclaimed. Safe to call on a slot
+        that holds nothing; each block is held by exactly one slot, so a
+        release can never free another request's memory."""
+        freed = len(self._held[slot])
         self._free.extend(reversed(self._held[slot]))
         self._held[slot] = []
         self._reserved[slot] = 0
         self.table[slot, :] = TRASH
+        return freed
 
     def stats(self) -> dict:
         return {
@@ -174,6 +219,8 @@ class BlockPool:
             "reserved_blocks": self.reserved_blocks,
             "peak_used_blocks": self.peak_used,
             "min_free_blocks": self.min_free,
+            "optimistic": self.optimistic,
+            "alloc_failures": self.alloc_failures,
         }
 
 

@@ -59,6 +59,10 @@ class Request:
 
 QUEUED, PREFILLING, RUNNING, FINISHED = \
     "queued", "prefilling", "running", "finished"
+#: evicted from its slot mid-flight; waiting in the scheduler queue with a
+#: snapshot of its emitted tokens. Re-admission replays them (deterministic
+#: re-prefill + re-decode) before new tokens are emitted.
+PREEMPTED = "preempted"
 
 
 @dataclasses.dataclass
@@ -76,6 +80,17 @@ class RequestState:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     finish_reason: Optional[str] = None  # "eos" | "length"
+    # -- preemption / resume bookkeeping --------------------------------
+    # FIFO stamp from the scheduler's first submit; preserved across
+    # requeues so a preempted request re-enters ahead of everything that
+    # arrived after it (no starvation by later traffic).
+    queue_seq: Optional[int] = None
+    preempt_count: int = 0
+    # tokens still to be regenerated (not re-emitted) after a resume: the
+    # engine re-prefills the original prompt and lets the deterministic
+    # decode path re-sample the snapshot; emissions are suppressed until
+    # this counter drains, so clients never see a duplicate token.
+    replay_left: int = 0
 
     @property
     def prompt_len(self) -> int:

@@ -43,8 +43,21 @@ class Scheduler:
         return len(self._heap)
 
     def submit(self, state: RequestState) -> None:
+        """Queue ``state``. The FIFO stamp (``queue_seq``) is assigned once
+        on first submit and *preserved* on later submits, so a preempted
+        request re-enters ahead of everything that arrived after it."""
+        if state.queue_seq is None:
+            state.queue_seq = next(self._seq)
         heapq.heappush(self._heap,
-                       (state.request.priority, next(self._seq), state))
+                       (state.request.priority, state.queue_seq, state))
+
+    def requeue(self, state: RequestState) -> None:
+        """Re-queue a preempted request at its original (priority, arrival)
+        position. Together with the engine's victim policy (youngest,
+        lowest-priority first, and a per-request preemption-count bound)
+        this keeps preemption starvation-free: a victim can only be pushed
+        behind requests that were already ahead of it."""
+        self.submit(state)
 
     def pop_admissions(self, n_free: int,
                        chunk: Optional[int] = None,
@@ -80,6 +93,10 @@ class Scheduler:
             heapq.heappop(self._heap)
             spent += cost
             admitted.append(state)
+            # a refusal verdict only describes the *current* head — once a
+            # request is admitted past it, any earlier reason is stale and
+            # must not leak into this step's backpressure attribution.
+            self.last_refusal = None
         return admitted
 
     @staticmethod

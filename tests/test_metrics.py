@@ -23,7 +23,7 @@ from repro.models import lm
 from repro.models.blocks import ModelContext
 from repro.models.quantized import QuantizeConfig, quantize_model
 from repro.serving import (Engine, EngineMetrics, FakeClock, Request,
-                           SamplingParams)
+                           RequestState, SamplingParams, Scheduler)
 from repro.serving.metrics import (SCHEMA_VERSION, Gauge, Histogram,
                                    check_snapshot, pcts_ms, percentiles)
 from repro.serving.request import FINISHED, PREFILLING, QUEUED, RUNNING
@@ -316,3 +316,58 @@ def test_check_snapshot_flags_drift():
     stale = json.loads(json.dumps(snap))
     stale["schema_version"] = SCHEMA_VERSION + 1
     assert any("schema_version" in p for p in check_snapshot(stale))
+
+
+# ---------------------------------------------------------------------------
+# backpressure attribution: refusal verdicts never go stale
+# ---------------------------------------------------------------------------
+
+
+def _queued(rid, prompt_len=4, priority=0):
+    return RequestState(
+        request=Request(prompt=tuple(range(1, prompt_len + 1)),
+                        max_new_tokens=4, priority=priority),
+        request_id=rid, arrival_t=0.0, submit_t=0.0)
+
+
+def test_last_refusal_cleared_on_successful_admission():
+    """Regression: a refusal verdict recorded for one queue head must not
+    outlive a later successful admission — the engine turns
+    ``last_refusal`` into the blocked_on_{blocks,budget} counters, so a
+    stale verdict charges backpressure to a step where nothing blocked."""
+    sched = Scheduler()
+    a, b = _queued(0), _queued(1)
+    sched.submit(a)
+    sched.submit(b)
+    # pool exhausted: the head is refused -> "resource" attribution
+    assert sched.pop_admissions(2, can_admit=lambda s: False) == []
+    assert sched.last_refusal == "resource"
+    # pool recovered: admission succeeds and the old verdict is gone
+    out = sched.pop_admissions(2, can_admit=lambda s: True)
+    assert [s.request_id for s in out] == [0, 1]
+    assert sched.last_refusal is None
+    # mixed call: one admitted, then the new head refused — the verdict
+    # describes the *current* head, not the earlier success
+    c, d = _queued(2), _queued(3)
+    sched.submit(c)
+    sched.submit(d)
+    assert sched.pop_admissions(2, can_admit=lambda s: s is c) == [c]
+    assert sched.last_refusal == "resource"
+    # draining the queue (no refusal at all) also leaves no verdict
+    assert sched.pop_admissions(2, can_admit=lambda s: True) == [d]
+    assert sched.last_refusal is None
+
+
+def test_last_refusal_budget_verdict_not_sticky():
+    """Same guarantee for the prefill-token budget: "budget" is reported
+    on the step the budget bites and cleared on the step the deferred
+    request actually gets in."""
+    sched = Scheduler(max_prefill_tokens=6)
+    sched.submit(_queued(0, prompt_len=5))
+    sched.submit(_queued(1, prompt_len=5))
+    out = sched.pop_admissions(2)
+    assert [s.request_id for s in out] == [0]
+    assert sched.last_refusal == "budget"
+    out = sched.pop_admissions(2)
+    assert [s.request_id for s in out] == [1]
+    assert sched.last_refusal is None

@@ -1,0 +1,247 @@
+"""Property tests for the paged-pool + scheduler invariants.
+
+The preemption/overcommit engine rests on a handful of host-side safety
+properties that no single example test can pin — they must hold across
+*every* interleaving of reserve / ensure(alloc) / release(free) / preempt:
+
+* conservation: ``sum(allocated) <= n_blocks`` and
+  ``free + used == n_blocks`` after every operation;
+* exclusivity: no physical block is ever mapped by two live slots;
+* TRASH isolation: block 0 is never handed out, and every unmapped table
+  entry points at it;
+* ``pool.stats()`` counters conserve (watermarks bound current values,
+  used equals the sum of per-slot holdings).
+
+The suite drives `BlockPool` (both conservative and optimistic modes)
+with random op sequences and checks the invariants after every single
+op, and drives `Scheduler` with random submit/pop/requeue interleavings
+to pin priority-FIFO order and requeue fairness.
+
+When hypothesis is installed the sequences are generated (and shrunk)
+under the ``ci`` profile registered in `test_properties.py` style; the
+containers that lack it run the same drivers under a seeded fallback
+fuzzer instead, so the invariants are exercised either way.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ImportError:  # the fallback fuzzer below still runs
+    HAVE_HYPOTHESIS = False
+
+from repro.serving.paged import TRASH, BlockPool, PoolExhausted
+from repro.serving.request import PREEMPTED, Request, RequestState
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# BlockPool invariants under random op interleavings
+# ---------------------------------------------------------------------------
+
+
+def check_pool_invariants(pool: BlockPool) -> None:
+    """Every safety property the engine relies on, checked structurally."""
+    held = [pool.held(s) for s in range(pool.n_slots)]
+    all_held = [b for hs in held for b in hs]
+    # conservation: free + used == n_blocks, used == sum of holdings
+    assert pool.free_blocks + pool.used_blocks == pool.n_blocks
+    assert pool.used_blocks == len(all_held)
+    assert len(all_held) <= pool.n_blocks
+    # exclusivity: a block is held by at most one slot (and at most once)
+    assert len(all_held) == len(set(all_held))
+    # TRASH isolation: never allocated, never on the free list; ids valid
+    assert TRASH not in all_held
+    for b in all_held:
+        assert 1 <= b <= pool.n_blocks
+    # the table mirrors the holdings exactly: row s maps its held blocks
+    # in logical order and TRASH everywhere else
+    for s in range(pool.n_slots):
+        row = pool.table[s]
+        assert list(row[: len(held[s])]) == held[s]
+        assert all(int(x) == TRASH for x in row[len(held[s]):])
+    # stats counters conserve and watermarks bound the current values
+    stats = pool.stats()
+    assert stats["free_blocks"] == pool.free_blocks
+    assert stats["used_blocks"] == pool.used_blocks
+    assert stats["free_blocks"] + stats["used_blocks"] == stats["n_blocks"]
+    assert stats["peak_used_blocks"] >= stats["used_blocks"]
+    assert stats["min_free_blocks"] <= stats["free_blocks"]
+    assert 0 <= stats["reserved_blocks"] <= stats["n_blocks"]
+    assert stats["alloc_failures"] >= 0
+    if not pool.optimistic:
+        # conservative mode: allocation never outruns the reservation
+        for s in range(pool.n_slots):
+            assert len(held[s]) <= int(pool._reserved[s])
+
+
+def drive_pool(ops, n_blocks: int, optimistic: bool) -> BlockPool:
+    """Apply an op sequence, checking every invariant after every op.
+    ``ops`` is a list of (op, slot, n) with op in reserve / ensure /
+    release / preempt — preempt models the engine's eviction (release-all
+    on a slot that may be mid-allocation)."""
+    pool = BlockPool(n_blocks, 4, n_slots=4, max_blocks=8,
+                     optimistic=optimistic)
+    for op, slot, n in ops:
+        before = (pool.free_blocks,
+                  [tuple(pool.held(s)) for s in range(pool.n_slots)])
+        try:
+            if op == "reserve":
+                pool.reserve(slot, n)
+            elif op == "ensure":
+                pool.ensure(slot, n)
+            elif op in ("release", "preempt"):
+                assert pool.release(slot) >= 0
+        except PoolExhausted:
+            assert optimistic  # only the optimistic path may raise it
+            # exhaustion is atomic: the failed demand took nothing
+            after = (pool.free_blocks,
+                     [tuple(pool.held(s)) for s in range(pool.n_slots)])
+            assert after == before
+        except (RuntimeError, ValueError):
+            pass  # refusals must leave state intact — checked below
+        check_pool_invariants(pool)
+    return pool
+
+
+_OPS = ("reserve", "ensure", "release", "preempt")
+
+
+def _random_ops(rng, size: int):
+    return [(_OPS[int(rng.integers(0, 4))], int(rng.integers(0, 4)),
+             int(rng.integers(1, 15))) for _ in range(size)]
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("optimistic", [False, True])
+def test_pool_invariants_fuzz(seed, optimistic):
+    """Seeded fallback fuzzer: same driver as the hypothesis property,
+    runs in every container."""
+    rng = np.random.default_rng(seed)
+    drive_pool(_random_ops(rng, 40), n_blocks=int(rng.integers(1, 13)),
+               optimistic=optimistic)
+
+
+def test_trash_block_never_handed_out_exhaustively():
+    """Drain the whole pool: every allocated id is 1..n_blocks, never 0."""
+    pool = BlockPool(6, 2, n_slots=3, max_blocks=8, optimistic=True)
+    pool.ensure(0, 3)
+    pool.ensure(1, 3)
+    handed = pool.held(0) + pool.held(1)
+    assert sorted(handed) == [1, 2, 3, 4, 5, 6]
+    assert TRASH not in handed
+    with pytest.raises(PoolExhausted):
+        pool.ensure(2, 1)
+    check_pool_invariants(pool)
+
+
+def test_release_returns_blocks_once():
+    """Double release is a no-op, not a double-free: the second call
+    reclaims zero blocks and conservation holds."""
+    pool = BlockPool(4, 4, n_slots=2, max_blocks=8, optimistic=True)
+    pool.ensure(0, 3)
+    assert pool.release(0) == 3
+    assert pool.release(0) == 0
+    assert pool.free_blocks == 4
+    check_pool_invariants(pool)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: priority-FIFO order survives requeue interleavings
+# ---------------------------------------------------------------------------
+
+
+def _state(rid: int, priority: int) -> RequestState:
+    return RequestState(
+        request=Request(prompt=(1, 2, 3), max_new_tokens=4,
+                        priority=priority),
+        request_id=rid, arrival_t=0.0, submit_t=0.0)
+
+
+def drive_scheduler(prios, churn) -> None:
+    """Submit N requests, pop some, requeue a churned subset (preserved
+    ``queue_seq``), then drain: the drain order is exactly the global
+    (priority, original-arrival) order — a preempted request is never
+    demoted behind later arrivals — and nothing is lost or duplicated."""
+    sched = Scheduler()
+    states = [_state(i, p) for i, p in enumerate(prios)]
+    for s in states:
+        sched.submit(s)
+    popped = sched.pop_admissions(len(states) // 2 + 1)
+    kept = list(popped)
+    for idx in churn:
+        if kept:
+            victim = kept.pop(idx % len(kept))
+            victim.status = PREEMPTED
+            sched.requeue(victim)
+    drained = []
+    while len(sched):
+        drained.extend(sched.pop_admissions(3))
+    # nothing lost, nothing duplicated
+    assert sorted(s.request_id for s in drained + kept) == \
+        sorted(s.request_id for s in states)
+    # the post-churn drain comes out in global (priority, arrival) order
+    order = [(s.request.priority, s.queue_seq) for s in drained]
+    assert order == sorted(order)
+    # every queue_seq was assigned exactly once and preserved
+    assert len({s.queue_seq for s in states}) == len(states)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_scheduler_requeue_preserves_priority_fifo_fuzz(seed):
+    rng = np.random.default_rng(seed)
+    prios = [int(p) for p in rng.integers(0, 3,
+                                          size=int(rng.integers(1, 13)))]
+    churn = [int(c) for c in rng.integers(0, 12,
+                                          size=int(rng.integers(0, 9)))]
+    drive_scheduler(prios, churn)
+
+
+def test_requeued_head_beats_later_arrivals():
+    """A requeued request re-enters ahead of every same-priority request
+    that arrived after it."""
+    sched = Scheduler()
+    first = _state(0, 1)
+    sched.submit(first)
+    (head,) = sched.pop_admissions(1)
+    assert head is first
+    later = [_state(i + 1, p) for i, p in enumerate((0, 1, 1, 2))]
+    for s in later:
+        sched.submit(s)
+    sched.requeue(first)
+    drained = []
+    while len(sched):
+        drained.extend(sched.pop_admissions(1))
+    same = [s for s in drained if s.request.priority == 1]
+    assert same[0] is first  # ahead of both later priority-1 arrivals
+    # but NOT ahead of better-priority traffic
+    assert drained[0] is later[0]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-generated versions of the same drivers (ci profile)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    pool_ops = st.lists(
+        st.tuples(st.sampled_from(_OPS), st.integers(0, 3),
+                  st.integers(1, 14)),
+        min_size=1, max_size=40)
+
+    @given(ops=pool_ops, n_blocks=st.integers(1, 12),
+           optimistic=st.booleans())
+    def test_pool_invariants_property(ops, n_blocks, optimistic):
+        drive_pool(ops, n_blocks, optimistic)
+
+    @given(prios=st.lists(st.integers(0, 2), min_size=1, max_size=12),
+           churn=st.lists(st.integers(0, 11), max_size=8))
+    def test_scheduler_requeue_property(prios, churn):
+        drive_scheduler(prios, churn)
+else:
+    def test_pool_invariants_property():
+        pytest.skip("hypothesis not installed in this container "
+                    "(the seeded fuzz tests above cover the driver)")

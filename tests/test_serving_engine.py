@@ -493,3 +493,166 @@ def test_best_decode_attn_block_measure_callable():
     b = tuning.best_decode_attn_block(4, 8, 4, 2048, 128)
     assert a is b
     assert a.block_s in (128, 256, 512, 1024, 2048)
+
+
+# ---------------------------------------------------------------------------
+# preemption + optimistic overcommit
+# ---------------------------------------------------------------------------
+
+
+def test_overcommit_requires_paged_pool(served):
+    with pytest.raises(ValueError, match="overcommit"):
+        _engine(served, overcommit=True)
+
+
+def test_overcommit_admits_beyond_worst_case_reservation(served):
+    """Two requests whose combined worst-case exceeds the pool: the
+    conservative gate serializes them; overcommit runs them concurrently
+    (their *actual* footprints fit) without a single preemption."""
+    # each request worst-case: 8 prompt-extent + 24 budget -> 4 blocks of
+    # 8; pool of 6 blocks fits one worst case, not two
+    reqs = [Request(prompt=tuple(range(1, 8)), max_new_tokens=24,
+                    eos_id=None) for _ in range(2)]
+    conservative = _engine(served, kv_block_size=8, kv_pool_tokens=48)
+    for r in reqs:
+        conservative.submit(r)
+    conservative.run()
+    assert conservative.stats["peak_running"] == 1  # serialized
+
+    over = _engine(served, kv_block_size=8, kv_pool_tokens=48,
+                   overcommit=True)
+    states = [over.submit(r) for r in reqs]
+    over.run()
+    assert over.stats["peak_running"] == 2  # concurrent at equal budget
+    # both rows eventually want 4 blocks each (31 positions) against 6
+    # total, so the safety valve must fire — and both must still finish
+    # with their full budget of tokens
+    assert over.stats["preemptions"] > 0
+    for st in states:
+        assert len(st.output()) == 24
+
+
+def test_preempt_churn_matches_sequential_oracle(served):
+    """The satellite churn oracle: seeded random arrivals, lengths,
+    priorities and EOS through a deliberately undersized pool with paged
+    + chunked + overcommit on. Every request completes, preemptions
+    actually happen (including mid-generation), and every output —
+    preempted-and-resumed or not — is bitwise equal to the request run
+    alone on a roomy engine."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(7)
+    eos = 5  # tiny vocab: greedy streams hit it organically
+    reqs = []
+    for i in range(10):
+        p = tuple(int(t) for t in
+                  rng.integers(0, cfg.vocab_size,
+                               size=int(rng.integers(3, 14))))
+        sp = SamplingParams() if i % 3 else SamplingParams(
+            greedy=False, temperature=0.8, top_k=8, seed=100 + i)
+        reqs.append(Request(prompt=p,
+                            max_new_tokens=int(rng.integers(6, 20)),
+                            eos_id=eos, sampling=sp,
+                            priority=int(rng.integers(0, 2))))
+
+    oracle = []
+    for r in reqs:
+        solo = _engine(served, kv_block_size=8, prefill_chunk=4)
+        st = solo.submit(r)
+        solo.run()
+        oracle.append(st.output())
+
+    # 4 slots x 64 max_len but only 6 blocks of 8 = 48 pool tokens, and
+    # arrivals staggered so admission interleaves with running decodes
+    eng = _engine(served, n_slots=4, kv_block_size=8, kv_pool_tokens=48,
+                  prefill_chunk=4, step_horizon=2, overcommit=True)
+    arrive = sorted(int(s) for s in rng.integers(0, 12, size=len(reqs)))
+    states, pending = [], list(zip(arrive, reqs))
+    step = 0
+    while pending or eng.has_work():
+        while pending and pending[0][0] <= step:
+            states.append(eng.submit(pending.pop(0)[1]))
+        eng.step()
+        step += 1
+        assert step < 2000, "engine failed to drain"
+
+    assert eng.stats["preemptions"] > 0, "undersized pool never preempted"
+    # at least one victim was mid-generation: its snapshot was replayed
+    assert eng.stats["replayed_tokens"] > 0
+    assert any(st.preempt_count > 0 for st in states)
+    for st, ora in zip(states, oracle):
+        assert st.done
+        assert st.output() == ora  # bitwise, preempted or not
+    # fairness bound held
+    assert all(st.preempt_count <= eng.preempt_limit + eng.n_slots
+               for st in states)
+
+
+def test_preemption_no_deadlock_no_starvation(served):
+    """Heavy-tailed load: a few long requests *claim* worst cases that in
+    sum dwarf the pool, while most requests are short — so worst-case
+    admission would serialize everything but typical demand fits. The
+    engine must keep making forward progress every k steps, drain
+    completely, and bound every request's preemption count."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(12):
+        p = tuple(int(t) for t in
+                  rng.integers(0, cfg.vocab_size,
+                               size=int(rng.integers(3, 10))))
+        # every 4th request wants 40 new tokens (5+ blocks; together the
+        # three long ones over-claim half the 6-block pool each), the
+        # rest are short — the heavy tail the optimistic pool exploits
+        budget = 40 if i % 4 == 0 else int(rng.integers(2, 7))
+        reqs.append(Request(prompt=p, max_new_tokens=budget))
+
+    eng = _engine(served, n_slots=4, kv_block_size=8, kv_pool_tokens=48,
+                  prefill_chunk=4, overcommit=True)
+    states = [eng.submit(r) for r in reqs]
+
+    def progress():
+        return (eng.stats["finished"], eng.stats["tokens_out"],
+                eng.stats["replayed_tokens"], eng.stats["prefill_chunks"],
+                eng.stats["admitted"])
+
+    k = 12  # a replay of the longest snapshot fits well inside this
+    last, stale = progress(), 0
+    for step in range(4000):
+        if not eng.has_work():
+            break
+        eng.step()
+        cur = progress()
+        stale = stale + 1 if cur == last else 0
+        last = cur
+        assert stale < k, f"no forward progress for {k} steps at {step}"
+    assert not eng.has_work(), "engine deadlocked"
+    assert all(st.done for st in states)
+    assert all(st.finish_reason in ("eos", "length") for st in states)
+    # bounded preemption per request: no one was starved by churn
+    assert all(st.preempt_count <= eng.preempt_limit + eng.n_slots
+               for st in states)
+
+
+def test_preempted_tokens_never_mutate_after_streaming(served):
+    """Clients hold references to ``st.tokens`` while the engine runs;
+    preemption+resume must only ever append — never rewrite — the
+    streamed prefix."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=tuple(int(t) for t in
+                                 rng.integers(0, cfg.vocab_size, size=6)),
+                    max_new_tokens=14) for _ in range(6)]
+    eng = _engine(served, n_slots=3, kv_block_size=8, kv_pool_tokens=40,
+                  prefill_chunk=4, overcommit=True)
+    states = [eng.submit(r) for r in reqs]
+    seen = {st.request_id: [] for st in states}
+    steps = 0
+    while eng.has_work():
+        eng.step()
+        steps += 1
+        assert steps < 2000
+        for st in states:
+            prefix = seen[st.request_id]
+            assert st.tokens[: len(prefix)] == prefix  # append-only
+            seen[st.request_id] = list(st.tokens)
+    assert eng.stats["preemptions"] > 0
