@@ -69,6 +69,14 @@ trajectory is tracked PR over PR:
    `repro.serving.metrics.check_snapshot` (stable operator-facing schema).
    Gates: ``serving_metrics_overhead``, ``serving_metrics_schema``.
 
+7. **Fault chaos** (seeded, deterministic; runs even with ``--no-smoke``):
+   a `repro.serving.FaultSchedule` injects pool exhaustion, NaN logits,
+   clock jumps, submit storms and cancels into an overcommitted paged
+   engine while `repro.serving.run_chaos` audits block-pool conservation,
+   all-requests-terminal, and the metrics terminal-reason conservation
+   identity after every step. Gate: ``serving_fault_chaos`` (zero
+   violations).
+
 Usage: PYTHONPATH=src python -m benchmarks.bench_serving [--no-smoke]
 """
 
@@ -638,6 +646,77 @@ def metrics_overhead_run(print_fn=print, reps: int = METRICS_REPS) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# 1e) fault chaos: seeded injection must not break engine invariants
+# ---------------------------------------------------------------------------
+
+
+def fault_chaos_run(print_fn=print) -> dict:
+    """Seeded chaos through the real engine (deterministic, so it runs
+    even with ``--no-smoke`` and gates ``run.py --check`` as
+    ``serving_fault_chaos``): a `repro.serving.FaultSchedule` injects
+    pool exhaustion, NaN logits, clock jumps, submit storms and cancels
+    into an overcommitted paged engine while `repro.serving.run_chaos`
+    audits the robustness invariants after every step — block-pool
+    conservation (`BlockPool.check`), every request (original and
+    storm-injected) reaching a terminal state, and the metrics
+    terminal-reason conservation identity. The same driver backs the
+    pytest chaos property test, so CI and the suite judge one
+    contract."""
+    from repro.launch.serve import Server
+    from repro.serving import (FakeClock, FaultSchedule, Request,
+                               SamplingParams, run_chaos)
+
+    server = Server(arch="qwen3-4b", smoke=True, w_bits=2, max_len=MAX_LEN)
+    rng = np.random.default_rng(SEED + 13)
+
+    def rand_request(r, i=None):
+        # doubles as the schedule's storm factory (called with the
+        # schedule's own rng, i=None → plain greedy request)
+        p = tuple(int(t) for t in
+                  r.integers(0, server.cfg.vocab_size,
+                             size=int(r.integers(4, 13))))
+        sampling = SamplingParams(greedy=False, temperature=0.8, top_k=8,
+                                  seed=300 + i) \
+            if i is not None and i % 3 == 0 else SamplingParams()
+        return Request(prompt=p, max_new_tokens=int(r.integers(4, 11)),
+                       deadline_s=25.0
+                       if i is not None and i % 4 == 0 else None,
+                       sampling=sampling)
+
+    reqs = [rand_request(rng, i) for i in range(10)]
+    clock = FakeClock()
+    schedule = FaultSchedule(
+        SEED + 13, nan_rate=0.08, exhaust_rate=0.10, clock_rate=0.10,
+        clock_jump_s=5.0, storm_rate=0.10, storm_size=2, cancel_rate=0.15,
+        max_faults=12, request_factory=rand_request, clock=clock)
+    eng = server.engine(
+        n_slots=4, fresh=True, prefill_bucket=PAGED_BUCKET,
+        step_horizon=PAGED_HORIZON, prefill_chunk=PAGED_BUCKET,
+        kv_block_size=KV_BLOCK, kv_pool_tokens=8 * KV_BLOCK,
+        overcommit=True, clock=clock, fault_hook=schedule)
+    res = run_chaos(eng, reqs, schedule, max_steps=2000)
+    term = eng.metrics.snapshot()["terminal"]
+    kinds: dict = {}
+    for rec in schedule.log:
+        kinds[rec["kind"]] = kinds.get(rec["kind"], 0) + 1
+    r = {
+        "n_requests": len(res["states"]),
+        "steps": res["steps"],
+        "faults": kinds,
+        "terminal": term,
+        "violations": res["violations"],
+        "ok": not res["violations"],
+    }
+    print_fn(f"serving_fault_chaos,requests={r['n_requests']},"
+             f"steps={r['steps']},faults={sum(kinds.values())},"
+             f"finished={term['finished']},timed_out={term['timed_out']},"
+             f"cancelled={term['cancelled']},failed={term['failed']},"
+             f"violations={len(res['violations'])},"
+             f"{'PASS' if r['ok'] else 'FAIL'}")
+    return r
+
+
+# ---------------------------------------------------------------------------
 # 2) smoke wall-clock (tiny model, CPU-indicative)
 # ---------------------------------------------------------------------------
 
@@ -817,6 +896,12 @@ def run(print_fn=print, smoke: bool = True,
     results["metrics_overhead_ok"] = mo["ok"]
     results["metrics_schema_ok"] = mo["schema_ok"]
 
+    # fault chaos (seeded, deterministic — runs even without smoke so
+    # --check gates the robustness invariants before they ship)
+    fc = fault_chaos_run(print_fn)
+    results["fault_chaos"] = fc
+    results["fault_chaos_ok"] = fc["ok"]
+
     if smoke:
         ps = paged_smoke_run(print_fn)
         results["paged_smoke"] = ps
@@ -852,6 +937,7 @@ def main(argv=None) -> int:
     ok = (r["modeled_speedup_ok"] and r["paged_concurrency_ok"]
           and r["overcommit_concurrency_ok"] and r["preempt_exactness_ok"]
           and r["metrics_overhead_ok"] and r["metrics_schema_ok"]
+          and r["fault_chaos_ok"]
           and r.get("smoke_speedup_ok", True)
           and r.get("paged_smoke_ok", True)
           and r.get("chunked_paged_ok", True))

@@ -125,6 +125,12 @@ def serving_section(smoke: bool, section=None) -> list[str]:
         failures.append("serving_metrics_overhead")
     if not r.get("metrics_schema_ok", True):
         failures.append("serving_metrics_schema")
+    # fault chaos runs smoke or not (seeded, deterministic): injected
+    # pool exhaustion / NaN logits / clock jumps / storms / cancels must
+    # leave zero invariant violations — pool conservation, every request
+    # terminal, metrics terminal-reason conservation (see bench_serving §7)
+    if not r.get("fault_chaos_ok", True):
+        failures.append("serving_fault_chaos")
     return failures
 
 

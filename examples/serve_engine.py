@@ -23,8 +23,15 @@ with ``--paged`` since the paged `attend_chunk` landed.
 ``--metrics`` prints the operator snapshot after the drain — the same
 `Engine.metrics.snapshot()` dict a monitoring scraper would read:
 request latency percentiles (TTFT/TPOT/e2e/queue-wait), lifecycle and
-backpressure counters, occupancy/free-block gauges, and where each step's
-wall-clock went (host vs prefill vs device).
+backpressure counters, occupancy/free-block gauges, terminal-reason
+breakdown, and where each step's wall-clock went (host vs prefill vs
+device).
+
+``--deadline-s N`` attaches a wall-clock deadline to every request
+(expired requests retire as ``timed_out`` between steps, freeing their
+capacity); ``--cancel-after N`` cancels the last-submitted request after
+N engine steps (`Engine.cancel` is safe at any lifecycle stage). The
+final report includes the terminal-reason summary either way.
 """
 
 import argparse
@@ -53,6 +60,14 @@ def main():
     p.add_argument("--metrics", action="store_true",
                    help="print the Engine.metrics.snapshot() summary "
                         "table after the drain")
+    p.add_argument("--deadline-s", type=float, default=None,
+                   help="attach a wall-clock deadline to every request: "
+                        "a request still unfinished after N seconds is "
+                        "retired as timed_out, freeing its slot/blocks")
+    p.add_argument("--cancel-after", type=int, default=None,
+                   help="cancel the last-submitted request after N engine "
+                        "steps (demonstrates Engine.cancel at whatever "
+                        "lifecycle stage it is in)")
     args = p.parse_args()
 
     server = Server(arch=args.arch, smoke=True, w_bits=args.w_bits,
@@ -72,12 +87,20 @@ def main():
         states.append(engine.submit(Request(
             prompt=tuple(prompt),
             max_new_tokens=int(rng.integers(4, 24)),
+            deadline_s=args.deadline_s,
             sampling=sampling)))
     print(f"submitted {len(states)} requests into {args.slots} slots "
           f"(queue depth {len(engine.scheduler)})")
 
+    steps = 0
     while engine.has_work():
         engine.step()
+        steps += 1
+        if args.cancel_after is not None and steps == args.cancel_after:
+            victim = states[-1]
+            if engine.cancel(victim.request_id):
+                print(f"      cancelled req{victim.request_id} "
+                      f"(was {victim.status})")
         running = [s.request_id for s in states if s.status == "running"]
         print(f"step {engine.stats['steps']:3d}: running={running} "
               f"queued={len(engine.scheduler)} "
@@ -86,11 +109,14 @@ def main():
     for st in states:
         kind = "greedy" if st.request.sampling.greedy else "sampled"
         print(f"req{st.request_id} [{kind:7s}] +{len(st.tokens)} tokens "
-              f"({st.finish_reason}): {st.output()[:8]}...")
+              f"({st.status}/{st.finish_reason}): {st.output()[:8]}...")
     occ = engine.stats["occupancy_sum"] / max(engine.stats["device_steps"], 1)
     print(f"device steps: {engine.stats['device_steps']} | "
           f"mean occupancy: {occ:.2f} | "
           f"host transfers: {engine.stats['transfers']}")
+    s = engine.stats
+    print(f"terminal: finished={s['finished']} timed_out={s['timed_out']} "
+          f"cancelled={s['cancelled']} failed={s['failed']}")
     if engine.pool is not None:
         print(f"paged pool: {engine.pool.stats()}")
     if args.metrics:
@@ -113,6 +139,10 @@ def print_metrics(snap):
     print(f"requests: {c['submitted']} submitted, {c['admitted']} admitted, "
           f"{c['finished']} finished "
           f"(eos={c['finished_eos']}, length={c['finished_length']})")
+    t = snap["terminal"]
+    print(f"terminal: finished={t['finished']} timed_out={t['timed_out']} "
+          f"cancelled={t['cancelled']} failed={t['failed']} "
+          f"in_flight={t['in_flight']}")
     print(f"tokens:   {c['tokens_out']} out | "
           f"goodput {snap['throughput']['goodput_tok_s']:.1f} tok/s "
           f"(raw {snap['throughput']['tok_s']:.1f})")

@@ -785,12 +785,21 @@ def generate_tokens(params, cache: dict, first_tok: Array, n_steps: int,
     return toks, cache
 
 
+#: sentinel token id emitted by `ragged_decode_step` when a row's logits
+#: are non-finite. Real token ids are always >= 0 (argmax / categorical
+#: over the vocab; `Request` rejects negative prompt ids), so the engine's
+#: host bookkeeping can detect a poisoned row from the *existing* per-step
+#: device->host transfer — failure isolation costs zero extra transfers.
+FAILED_TOKEN = -1
+
+
 @_scoped("repro.ragged_decode_step")
 def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
                        active: Array, sampling: dict, base_key: Array,
                        cfg: ArchConfig, ctx: ModelContext, *,
                        sample: bool = True,
-                       block_tables: Optional[Array] = None):
+                       block_tables: Optional[Array] = None,
+                       poison: Optional[Array] = None):
     """One continuous-batching engine step: every slot decodes at its own
     position with its own sampling parameters; one compiled function serves
     any slot occupancy.
@@ -819,6 +828,16 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
     BlockPool indirection (see `decode_step`); the engine keeps the tables
     host-side next to pos/active and uploads them only on block events.
 
+    ``poison`` ((B,) bool, fault injection only) overwrites the chosen
+    rows' logits with NaN *before* the finiteness guard, exercising the
+    failure-isolation path end to end. None (the default) compiles the
+    injection out entirely, so production engines pay nothing for it.
+
+    Failure isolation: any active row whose logits are not entirely finite
+    emits `FAILED_TOKEN` instead of a sampled id. When all logits are
+    finite the guard's `where` is an identity, so healthy rows' token
+    streams are bitwise unchanged by its presence.
+
     Returns (next_tok (B, 1), new_cache) — ``new_cache`` has no "pos" (the
     engine owns positions host-side and passes them in each step).
     """
@@ -829,6 +848,9 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
     c["pos"] = pos.astype(jnp.int32)
     logits, new_cache = decode_step(params, c, tok, cfg, ctx,
                                     block_tables=block_tables)
+    if poison is not None:
+        logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+    ok = jnp.all(jnp.isfinite(logits), axis=(1, 2))
     greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
     if sample:
         fold = lambda s, t: jax.random.fold_in(
@@ -842,6 +864,7 @@ def ragged_decode_step(params, cache: dict, tok: Array, pos: Array,
     else:
         nxt = greedy_tok
     nxt = jnp.where(active[:, None], nxt, tok)
+    nxt = jnp.where((active & ~ok)[:, None], jnp.int32(FAILED_TOKEN), nxt)
     new_cache["pos"] = jnp.where(active, pos + 1, pos)
     return nxt, new_cache
 

@@ -12,14 +12,35 @@ replay resume) as the safety valve; `metrics.EngineMetrics` is
 the telemetry facade every engine carries (`Engine.metrics.snapshot()` —
 TTFT/TPOT/e2e percentiles, occupancy and free-block gauges, backpressure
 and horizon-waste counters, host/prefill/device phase timing).
+
+Robustness: requests carry optional deadlines
+(``Request(deadline_s=, ttft_deadline_s=)`` → ``TIMED_OUT``), can be
+cancelled at any stage (`Engine.cancel` → ``CANCELLED``), and a row whose
+logits go non-finite is retired alone as ``FAILED`` while the rest of the
+batch continues bitwise-unchanged; a stuck drain raises `EngineStuck`
+with a diagnostic dump. `faults.FaultSchedule` injects deterministic
+fault schedules (``Engine(fault_hook=...)`` or ``REPRO_FAULTS``) and
+`faults.run_chaos` drives the chaos property test over them.
 """
 
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, EngineStuck
+from repro.serving.faults import FaultSchedule, run_chaos
 from repro.serving.metrics import EngineMetrics, FakeClock
 from repro.serving.paged import BlockPool, PoolExhausted
-from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.request import (
+    CANCELLED,
+    FAILED,
+    FINISHED,
+    TERMINAL_STATUSES,
+    TIMED_OUT,
+    Request,
+    RequestState,
+    SamplingParams,
+)
 from repro.serving.scheduler import Scheduler
 
-__all__ = ["BlockPool", "Engine", "EngineMetrics", "FakeClock",
-           "PoolExhausted", "Request", "RequestState", "SamplingParams",
-           "Scheduler"]
+__all__ = ["BlockPool", "CANCELLED", "Engine", "EngineMetrics",
+           "EngineStuck", "FAILED", "FINISHED", "FakeClock",
+           "FaultSchedule", "PoolExhausted", "Request", "RequestState",
+           "SamplingParams", "Scheduler", "TERMINAL_STATUSES",
+           "TIMED_OUT", "run_chaos"]

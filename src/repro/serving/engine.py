@@ -135,6 +135,46 @@ engine **preempts** a victim instead of failing:
   ``resume_prefill_tokens`` counter against the concurrency overcommit
   buys (``bench_serving`` gates the trade ≥ 1.3x).
 
+Failure handling (deadlines, cancellation, isolation)
+-----------------------------------------------------
+
+Production traffic fails per-request, and so does this engine — the only
+process-level failure left is a genuinely stuck engine, which raises
+`EngineStuck` with a diagnostic dump instead of a bare error:
+
+* **Deadlines**: ``Request(deadline_s=, ttft_deadline_s=)`` are relative
+  budgets on the engine's monotonic clock. A sweep between device steps
+  (active only while any live request carries a deadline) retires expired
+  requests — queued, preempted, or slotted — as ``TIMED_OUT``, freeing
+  their slot and pool blocks like any retirement. Deadline-aware
+  admission also expires queued work that can no longer meet its TTFT
+  budget (estimated from an EWMA of recent step wall time) rather than
+  wasting prefill on a request whose client has already given up.
+* **Cancellation**: `Engine.cancel(request_id)` retires a request as
+  ``CANCELLED`` at any lifecycle stage — queued and preempted states are
+  pulled from the scheduler heap, prefilling/running states release their
+  slot — and is safe between steps or from a fault hook (stale pending
+  bookkeeping for a just-cancelled row is skipped, never applied).
+* **Failure isolation**: `lm.ragged_decode_step` guards its logits — any
+  active row whose logits are non-finite emits the negative
+  ``FAILED_TOKEN`` sentinel instead of a sampled id (real ids are >= 0;
+  `Request` rejects negative prompt ids). The host spots the sentinel in
+  the step's *existing* single device→host transfer and retires only that
+  row as ``FAILED`` (offending step in ``RequestState.error``); every
+  other row's stream is bitwise unchanged (the guard's ``where`` is an
+  identity on finite logits). A wall-clock **watchdog** (``watchdog_s`` /
+  ``REPRO_WATCHDOG_S``) counts steps slower than its threshold into
+  metrics (``watchdog_slow_steps``) so operators see degradation without
+  the engine ever blocking on its own diagnosis, and ``run(timeout_s=)``
+  bounds a drain in wall time.
+* **Fault injection**: ``fault_hook`` (or ``REPRO_FAULTS``, parsed by
+  `faults.FaultSchedule.from_spec`) is called once per step between
+  bookkeeping and admission; `repro.serving.faults` drives deterministic
+  chaos schedules through it (injected `PoolExhausted`, NaN logits via
+  `Engine.inject_nan`, clock jumps, submit storms) and the chaos property
+  test holds the engine to pool conservation + all-terminal outcomes
+  under any schedule.
+
 Observability
 -------------
 
@@ -170,11 +210,14 @@ from repro.models.blocks import ModelContext
 from repro.serving.metrics import EngineMetrics
 from repro.serving.paged import BlockPool, PoolExhausted, init_paged_cache
 from repro.serving.request import (
+    CANCELLED,
+    FAILED,
     FINISHED,
     PREEMPTED,
     PREFILLING,
     QUEUED,
     RUNNING,
+    TIMED_OUT,
     Request,
     RequestState,
     SamplingParams,
@@ -185,6 +228,23 @@ _ENGINE_FAMILIES = ("dense", "moe", "ssm", "hybrid")
 # families whose prefill is order-sensitive end to end (recurrent state):
 # bucket padding would corrupt the final state, so prompts prefill unpadded
 _EXACT_LEN_FAMILIES = ("ssm", "hybrid")
+
+# every terminal path funnels through _finish_state with one of these
+# reasons; the two maps keep status / stats / metrics naming consistent
+_STATUS_FOR_REASON = {"eos": FINISHED, "length": FINISHED,
+                      "timeout": TIMED_OUT, "cancelled": CANCELLED,
+                      "failed": FAILED}
+_STAT_FOR_REASON = {"eos": "finished", "length": "finished",
+                    "timeout": "timed_out", "cancelled": "cancelled",
+                    "failed": "failed"}
+
+
+class EngineStuck(RuntimeError):
+    """`Engine.run` could not drain (step budget or wall-clock timeout
+    exhausted with work still live). The message is a diagnostic dump —
+    queue depth and last refusal, per-slot request status, pool and
+    terminal-counter state — so a stuck-engine report is actionable
+    without a debugger attached."""
 
 
 class Engine:
@@ -200,7 +260,9 @@ class Engine:
                  preempt_limit: int = 8,
                  base_seed: int = 0,
                  clock: Optional[callable] = None,
-                 metrics: Union[bool, EngineMetrics, None] = None):
+                 metrics: Union[bool, EngineMetrics, None] = None,
+                 watchdog_s: Optional[float] = None,
+                 fault_hook: Optional[callable] = None):
         if cfg.family not in _ENGINE_FAMILIES:
             raise NotImplementedError(
                 f"continuous batching supports {_ENGINE_FAMILIES}, "
@@ -241,6 +303,24 @@ class Engine:
             self.metrics = EngineMetrics(
                 enabled=True if metrics is None else bool(metrics),
                 clock=self.clock)
+        # wall-clock watchdog: steps slower than this are counted (never
+        # interrupted) — surfacing degradation is observability's job,
+        # blocking the loop to report slowness would be self-inflicted
+        if watchdog_s is None:
+            env = os.environ.get("REPRO_WATCHDOG_S")
+            watchdog_s = float(env) if env else None
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0, got {watchdog_s}")
+        self.watchdog_s = watchdog_s
+        # fault injection point (tests / chaos harness): called once per
+        # step between bookkeeping and admission. REPRO_FAULTS installs a
+        # FaultSchedule from its spec when no explicit hook is passed.
+        if fault_hook is None:
+            spec = os.environ.get("REPRO_FAULTS")
+            if spec:
+                from repro.serving.faults import FaultSchedule
+                fault_hook = FaultSchedule.from_spec(spec)
+        self.fault_hook = fault_hook
 
         self.pool: Optional[BlockPool] = None
         if kv_block_size is not None:
@@ -283,6 +363,12 @@ class Engine:
         self._top_p = np.zeros(n_slots, np.float32)
         self._seed = np.zeros(n_slots, np.int32)
         self._n_sampled = np.zeros(n_slots, np.int32)
+        # fault-injection state: _poison mirrors the device NaN-injection
+        # mask (lazily created on first inject_nan; None compiles the
+        # injection out of the step entirely), _fault_exhaust_once arms
+        # one synthetic PoolExhausted at the next ensure.
+        self._poison: Optional[np.ndarray] = None
+        self._fault_exhaust_once = False
         self._dev: dict[str, jax.Array] = {}
         self._push_rows()
         self._dirty = False
@@ -290,19 +376,32 @@ class Engine:
 
         self._pending: Optional[np.ndarray] = None
         self._pending_slots: list[tuple[int, RequestState]] = []
+        self._pending_step = 0  # stats["steps"] of the step that decoded it
         self._next_id = 0
         self._auto_seed = 0
+        # request_id -> live (non-terminal) state, for cancel(); count of
+        # live deadline-carrying requests so the per-step sweep is free
+        # for deadline-less traffic
+        self._live: dict[int, RequestState] = {}
+        self._deadlined = 0
+        # EWMA of step wall time, feeding the TTFT-hopeless estimate.
+        # Starts at 0.0: until real steps have run the engine never
+        # second-guesses admission (and FakeClock tests stay exact —
+        # only hard-expired deadlines fire).
+        self._step_ewma = 0.0
         self.stats = {"steps": 0, "device_steps": 0, "transfers": 0,
                       "occupancy_sum": 0.0, "tokens_out": 0,
                       "admitted": 0, "finished": 0, "prefill_chunks": 0,
                       "peak_running": 0, "horizon": step_horizon,
-                      "preemptions": 0, "replayed_tokens": 0}
+                      "preemptions": 0, "replayed_tokens": 0,
+                      "timed_out": 0, "cancelled": 0, "failed": 0,
+                      "slow_steps": 0}
 
         # params are engine-constant: captured in the jit closures so the
         # (large) param tree is never flattened/hashed per call; `sample`
         # is a static flag — the all-greedy specialization compiles the
         # sampler out of the hot loop (greedy tokens are flag-invariant)
-        self._step_fn = jax.jit(self._raw_step, static_argnums=(11,))
+        self._step_fn = jax.jit(self._raw_step, static_argnums=(12,))
         self._admit_fns: dict[tuple[int, int, bool], callable] = {}
         # chunk processors, compiled once per (REPRO_CHUNK_ATTN mode,
         # prefix bucket) — the mode is read at trace time inside the
@@ -329,6 +428,10 @@ class Engine:
             # paged mode: the block tables ride along with the row state
             # (tiny int32 host→device upload, only on slot/block events)
             "bt": None if self.pool is None else jnp.asarray(self.pool.table),
+            # NaN-injection mask (fault harness only): None until the
+            # first inject_nan, which keeps it out of the compiled step
+            "poison": None if self._poison is None
+            else jnp.asarray(self._poison),
         }
 
     # ------------------------------------------------------------------
@@ -336,13 +439,14 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _raw_step(self, cache, tok, pos, step, active, greedy, temp,
-                  top_k, top_p, seed, bt, sample):
+                  top_k, top_p, seed, bt, poison, sample):
         """H = step_horizon ragged decode steps as one lax.scan; emits the
         H consumed tokens (the stream the host appends) and the advanced
         carry. Inactive rows freeze inside ragged_decode_step. ``bt`` is
         the (B, max_blocks) block-table array in paged mode, else None;
         the host pre-maps every block the horizon can touch, so the tables
-        are loop-invariant across the scan."""
+        are loop-invariant across the scan. ``poison`` is the (B,) NaN
+        fault-injection mask (None outside the fault harness)."""
         base = {"greedy": greedy, "temperature": temp, "top_k": top_k,
                 "top_p": top_p, "seed": seed}
 
@@ -351,7 +455,7 @@ class Engine:
             nxt, nc = lm.ragged_decode_step(
                 self.params, cache, tok, pos, active,
                 dict(base, step=step), self._base_key, self.cfg, self.ctx,
-                sample=sample, block_tables=bt)
+                sample=sample, block_tables=bt, poison=poison)
             new_pos = nc.pop("pos")
             new_step = step + active.astype(jnp.int32)
             return (nxt, new_pos, new_step, nc), tok
@@ -569,6 +673,10 @@ class Engine:
         state = RequestState(request=request, request_id=self._next_id,
                              arrival_t=time.time(), submit_t=self.clock())
         self._next_id += 1
+        self._live[state.request_id] = state
+        if request.deadline_s is not None \
+                or request.ttft_deadline_s is not None:
+            self._deadlined += 1
         self.scheduler.submit(state)
         self.metrics.on_submit(state)
         return state
@@ -596,7 +704,10 @@ class Engine:
         metrics on vs off cannot change a token."""
         mx = self.metrics
         rec = mx.enabled
-        t0 = self.clock() if rec else 0.0
+        # watchdog base: read before the fault hook so injected clock
+        # jumps register as slow steps (what a real stall looks like)
+        t_step0 = self.clock()
+        t0 = t_step0 if rec else 0.0
         t_prefill = 0.0
         self.stats["steps"] += 1
         mx.count("steps")
@@ -606,8 +717,24 @@ class Engine:
             now = self.clock()
             H = self._pending.shape[0]
             for slot, st in self._pending_slots:
+                if st.done:
+                    # retired between steps (cancel / deadline sweep):
+                    # its pending tokens are dropped, never applied
+                    continue
                 for h in range(H):
                     t = int(self._pending[h, slot, 0])
+                    if t < 0:
+                        # the device guard's FAILED sentinel: this row's
+                        # logits went non-finite. Retire only this row;
+                        # every other row's stream is untouched (the
+                        # guard is an identity on finite logits).
+                        self._retire(
+                            slot, st, "failed", horizon_waste=H - 1 - h,
+                            error={"kind": "non_finite_logits",
+                                   "step": self._pending_step,
+                                   "horizon_index": h,
+                                   "tokens_streamed": len(st.tokens)})
+                        break
                     if st.replay_left > 0:
                         # deterministic replay of a resumed request: the
                         # decode path just re-derived a token the client
@@ -639,6 +766,29 @@ class Engine:
                         break
             self._pending = None
             self._pending_slots = []
+
+        # 1b) fault injection (chaos harness / tests): after bookkeeping —
+        # the last block's tokens are accounted before any injected
+        # cancel/poison — and before admission, so injected submits and
+        # deadline expiries see this step's scheduling.
+        if self.fault_hook is not None:
+            self.fault_hook(self)
+
+        # 1c) deadline sweep: only while any live request carries one.
+        # Queued/preempted expiries leave the heap; slotted expiries free
+        # their slot (and blocks) like any retirement. TTFT-hopeless
+        # queued work — admission + prefill cannot beat its remaining
+        # budget at the recent step pace — is expired here too, instead
+        # of wasting prefill on a request whose client already gave up.
+        if self._deadlined:
+            now = self.clock()
+            for st in self.scheduler.states():
+                if self._expired(st, now) or self._ttft_hopeless(st, now):
+                    self.scheduler.remove(st)
+                    self._finish_queued(st, "timeout")
+            for slot, st in enumerate(self._slots):
+                if st is not None and self._expired(st, now):
+                    self._retire(slot, st, "timeout")
 
         # 2) admission into free slots (freed this step included);
         # same-bucket admissions batch into one compiled call. In paged
@@ -768,9 +918,15 @@ class Engine:
                 self._step_fn(self.cache, self._tok, d["pos"], d["step"],
                               d["active"], d["greedy"], d["temp"],
                               d["top_k"], d["top_p"], d["seed"], d["bt"],
-                              sample)
+                              d["poison"], sample)
             self._pending = np.asarray(emitted)  # one device→host transfer
             self._pending_slots = running
+            self._pending_step = self.stats["steps"]
+            if self._poison is not None and self._poison.any():
+                # one-shot: the injected NaN fired this step; disarm so
+                # the next step's logits are clean again
+                self._poison[:] = False
+                self._dirty = True
             # replay the device update on the host mirrors (no transfer)
             h = self.step_horizon
             self._pos = np.where(self._active, self._pos + h, self._pos)
@@ -786,8 +942,23 @@ class Engine:
             mx.observe_step(host_s=(self.clock() - t0) - t_prefill,
                             prefill_s=t_prefill)
 
-    def run(self, max_steps: int = 1_000_000) -> None:
-        """Drain: step until queue and slots are empty. With
+        # 5) watchdog + step-pace EWMA: count (never interrupt) steps
+        # slower than the threshold; the EWMA feeds the TTFT-hopeless
+        # admission estimate.
+        dt = self.clock() - t_step0
+        self._step_ewma = 0.2 * dt + 0.8 * self._step_ewma
+        if self.watchdog_s is not None and dt > self.watchdog_s:
+            self.stats["slow_steps"] += 1
+            mx.count("watchdog_slow_steps")
+            mx.event("watchdog_slow_step", step=self.stats["steps"],
+                     duration_s=dt)
+
+    def run(self, max_steps: int = 1_000_000,
+            timeout_s: Optional[float] = None) -> None:
+        """Drain: step until queue and slots are empty. ``timeout_s``
+        bounds the drain in wall time (the monotonic clock) — on either
+        budget running out, `EngineStuck` carries a full diagnostic dump
+        instead of hanging the caller or raising a bare error. With
         ``REPRO_TRACE_DIR`` set, the drain runs under a `jax.profiler`
         trace written to that directory — the compiled admit/chunk/decode
         calls carry `jax.named_scope` annotations (``repro.engine.*``,
@@ -796,15 +967,52 @@ class Engine:
         trace_dir = os.environ.get("REPRO_TRACE_DIR")
         if trace_dir:
             with jax.profiler.trace(trace_dir):
-                return self._drain(max_steps)
-        return self._drain(max_steps)
+                return self._drain(max_steps, timeout_s)
+        return self._drain(max_steps, timeout_s)
 
-    def _drain(self, max_steps: int) -> None:
+    def _drain(self, max_steps: int,
+               timeout_s: Optional[float] = None) -> None:
+        t0 = self.clock()
         for _ in range(max_steps):
             if not self.has_work():
                 return
+            if timeout_s is not None and self.clock() - t0 > timeout_s:
+                raise EngineStuck(self._diagnose(
+                    f"engine did not drain within timeout_s={timeout_s}"))
             self.step()
-        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        raise EngineStuck(self._diagnose(
+            f"engine did not drain in {max_steps} steps"))
+
+    def _diagnose(self, reason: str) -> str:
+        """Multi-line stuck-engine dump: everything a report needs to be
+        actionable — where the work is (queue vs slots), why admission
+        last refused, how the pool stands, and the terminal counters."""
+        lines = [reason,
+                 f"  queue: depth={len(self.scheduler)} "
+                 f"last_refusal={self.scheduler.last_refusal!r}"]
+        for i, st in enumerate(self._slots):
+            if st is None:
+                lines.append(f"  slot {i}: free")
+            else:
+                lines.append(
+                    f"  slot {i}: request {st.request_id} {st.status} "
+                    f"pos={int(self._pos[i])} "
+                    f"tokens={len(st.tokens)}/{st.request.max_new_tokens} "
+                    f"preempts={st.preempt_count}")
+        if self.pool is not None:
+            p = self.pool.stats()
+            lines.append(
+                f"  pool: free={p['free_blocks']}/{p['n_blocks']} blocks, "
+                f"reserved={p['reserved_blocks']} "
+                f"alloc_failures={p['alloc_failures']} "
+                f"optimistic={p['optimistic']}")
+        s = self.stats
+        lines.append(
+            f"  stats: steps={s['steps']} finished={s['finished']} "
+            f"timed_out={s['timed_out']} cancelled={s['cancelled']} "
+            f"failed={s['failed']} preemptions={s['preemptions']} "
+            f"slow_steps={s['slow_steps']}")
+        return "\n".join(lines)
 
     # ------------------------------------------------------------------
     # admission / retirement internals
@@ -992,26 +1200,61 @@ class Engine:
         """Overcommit-mode `BlockPool.ensure`: on `PoolExhausted`, preempt
         a victim and retry until the demand fits. Returns False when the
         demanding row itself was chosen as the victim (the caller drops
-        it from this step's work); True once the blocks are mapped."""
+        it from this step's work); True once the blocks are mapped.
+
+        An armed ``_fault_exhaust_once`` (FaultSchedule) raises one
+        synthetic `PoolExhausted` before the real ensure — the fault
+        flows through the genuine preemption machinery (a real victim is
+        evicted), never through a side door that could desynchronize pool
+        accounting. With no evictable victim the injected fault is a
+        no-op retry (a lone row's real demand always fits: submit()
+        bounds it)."""
+        injected = self._fault_exhaust_once
+        self._fault_exhaust_once = False
         while True:
             try:
+                if injected:
+                    raise PoolExhausted(
+                        "injected fault (FaultSchedule exhaust)")
                 if self.pool.ensure(slot, n_logical):
                     self._dirty = True
                 return True
             except PoolExhausted:
                 victim = self._pick_victim()
                 if victim is None:
+                    if injected:
+                        injected = False
+                        continue  # lone row: injected exhaust is a no-op
                     raise  # unreachable: submit() bounds a lone row's need
+                injected = False
                 vslot, vst = victim
                 self._preempt(vslot, vst)
                 if vslot == slot:
                     return False
 
-    def _retire(self, slot: int, st: RequestState, reason: str,
-                horizon_waste: int = 0) -> None:
-        st.status = FINISHED
+    def _finish_state(self, st: RequestState, reason: str,
+                      error: Optional[dict] = None) -> None:
+        """The one terminal transition: status from the reason map,
+        stamps, live-registry and deadline-count bookkeeping, stats. Both
+        retirement paths (slotted `_retire`, unslotted `_finish_queued`)
+        funnel through here so no outcome can skip the accounting."""
+        st.status = _STATUS_FOR_REASON[reason]
         st.finish_reason = reason
         st.finish_t = self.clock()
+        st.error = error
+        self._live.pop(st.request_id, None)
+        req = st.request
+        if req.deadline_s is not None or req.ttft_deadline_s is not None:
+            self._deadlined -= 1
+        self.stats[_STAT_FOR_REASON[reason]] += 1
+
+    def _retire(self, slot: int, st: RequestState, reason: str,
+                horizon_waste: int = 0,
+                error: Optional[dict] = None) -> None:
+        """Terminal transition for a slotted request (any reason: normal
+        finish, timeout, cancel, failure) — the slot and pool blocks are
+        freed in the same host step regardless of outcome."""
+        self._finish_state(st, reason, error)
         st.slot = -1
         self._slots[slot] = None
         self._active[slot] = False
@@ -1021,8 +1264,84 @@ class Engine:
             # retired row's frozen write can't touch a reused block
             self.pool.release(slot)
         self._dirty = True
-        self.stats["finished"] += 1
         self.metrics.on_retire(st, reason, horizon_waste)
+
+    def _finish_queued(self, st: RequestState, reason: str) -> None:
+        """Terminal transition for a request that holds no slot (queued or
+        preempted): cancellation / deadline expiry before (re)admission.
+        The caller has already pulled it from the scheduler heap."""
+        self._finish_state(st, reason)
+        st.slot = -1
+        self.metrics.on_retire(st, reason, 0)
+
+    # ------------------------------------------------------------------
+    # robustness: deadlines, cancellation, fault injection
+    # ------------------------------------------------------------------
+
+    def _expired(self, st: RequestState, now: float) -> bool:
+        """Past its end-to-end deadline, or token-less past its TTFT
+        deadline (once the first token streamed, only ``deadline_s`` can
+        expire the request)."""
+        req = st.request
+        if req.deadline_s is not None \
+                and now - st.submit_t >= req.deadline_s:
+            return True
+        return (req.ttft_deadline_s is not None
+                and st.first_token_t is None
+                and now - st.submit_t >= req.ttft_deadline_s)
+
+    def _ttft_hopeless(self, st: RequestState, now: float) -> bool:
+        """Deadline-aware admission: would admitting this queued request
+        now blow its TTFT budget anyway? Estimated as the steps its
+        prefill needs (one, or the chunk count plus the admission step)
+        at the recent step pace (EWMA). Conservative by construction —
+        the EWMA starts at 0, so nothing is refused until real steps
+        have established a pace."""
+        req = st.request
+        if req.ttft_deadline_s is None or st.first_token_t is not None:
+            return False
+        remaining = req.ttft_deadline_s - (now - st.submit_t)
+        L = st.prompt_len
+        chunk = self.prefill_chunk
+        steps = 1 if chunk is None or L <= chunk else -(-L // chunk) + 1
+        return steps * self._step_ewma > remaining
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a live request at any lifecycle stage. Queued and
+        preempted states leave the scheduler heap; prefilling/running
+        states release their slot and pool blocks. Returns False if the
+        id is unknown or already terminal (cancellation races a natural
+        finish — losing that race is not an error). Safe between steps
+        and from a fault hook: pending bookkeeping for a cancelled row is
+        dropped, never applied."""
+        st = self._live.get(request_id)
+        if st is None:
+            return False
+        if st.status in (QUEUED, PREEMPTED):
+            self.scheduler.remove(st)
+            self._finish_queued(st, "cancelled")
+        else:  # PREFILLING / RUNNING — it owns a slot
+            self._retire(st.slot, st, "cancelled")
+        return True
+
+    def live_states(self) -> list[RequestState]:
+        """Every non-terminal state the engine knows (queued, preempted,
+        prefilling, running) — what a shutdown would have to cancel, and
+        what the fault harness picks its victims from."""
+        return list(self._live.values())
+
+    def inject_nan(self, slot: int) -> None:
+        """Fault injection: poison ``slot``'s logits with NaN on the next
+        device step, exercising the FAILED isolation path end to end.
+        One-shot — the mask disarms after the step it fires in. The first
+        call swaps the compiled step to its poison-carrying variant (one
+        retrace); engines that never inject pay nothing."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
+        if self._poison is None:
+            self._poison = np.zeros(self.n_slots, bool)
+        self._poison[slot] = True
+        self._dirty = True
 
     # ------------------------------------------------------------------
     # convenience driver

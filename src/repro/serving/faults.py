@@ -1,0 +1,210 @@
+"""Deterministic fault injection for the serving engine (chaos harness).
+
+A `FaultSchedule` is a seeded per-step hook (``Engine(fault_hook=...)``,
+called once per step between bookkeeping and admission) that rolls an
+independent chance for each fault class and injects through the engine's
+*public* fault surface — never by mutating internals a real failure could
+not reach:
+
+* **exhaust** — arms one synthetic `PoolExhausted` at the next block
+  demand (overcommit engines only: that is the mode where exhaustion is a
+  recoverable event). The fault flows through the genuine preemption
+  machinery, evicting a real victim.
+* **nan** — `Engine.inject_nan` on a random RUNNING slot: the next device
+  step's logits for that row are NaN, the guard emits the FAILED
+  sentinel, and the host retires exactly that request as ``FAILED``.
+* **clock** — jumps the injected `FakeClock` forward (deadline expiries,
+  watchdog slow-step hits). Requires ``clock=``; never available via
+  ``REPRO_FAULTS`` (a real clock cannot be jumped).
+* **storm** — submits a burst of ``storm_size`` requests from
+  ``request_factory(rng)`` mid-run (admission backpressure under load).
+  The injected states are recorded in ``schedule.injected`` so the chaos
+  test can hold them to the all-terminal invariant too.
+* **cancel** — cancels a uniformly random live request (any stage).
+
+The draw sequence is a pure function of the seed — every fault, victim
+and burst replays bit-for-bit — and ``schedule.log`` keeps an audit trail
+(one record per injected fault, with the engine step it landed on).
+
+`run_chaos` is the property-test driver shared by
+``tests/test_serving_faults.py`` and the ``serving_fault_chaos`` gate in
+``run.py --check``: submit, drain under the schedule, audit
+`BlockPool.check` after every step, and require every request (original
+and storm-injected) to reach a terminal state plus the metrics terminal
+conservation identity.
+
+``REPRO_FAULTS`` installs a schedule on any engine without code changes:
+a comma-separated spec like ``seed=3,nan=0.05,exhaust=0.1,cancel=0.02``
+(see `FaultSchedule.from_spec`).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.serving.request import RUNNING
+
+#: REPRO_FAULTS spec keys -> (constructor kwarg, parser). Clock jumps and
+#: submit storms need injected collaborators (a FakeClock, a request
+#: factory) and are deliberately absent — an env var cannot supply them.
+_SPEC_KEYS = {
+    "seed": ("seed", int),
+    "nan": ("nan_rate", float),
+    "exhaust": ("exhaust_rate", float),
+    "cancel": ("cancel_rate", float),
+    "max_faults": ("max_faults", int),
+}
+
+
+class FaultSchedule:
+    """Seeded per-step fault injector (see module docstring). Rates are
+    independent per-step probabilities in [0, 1]; a step can land several
+    fault classes at once. ``max_faults`` caps the total injected (the
+    schedule goes quiet after), so a chaos run always drains."""
+
+    def __init__(self, seed: int = 0, *,
+                 nan_rate: float = 0.0,
+                 exhaust_rate: float = 0.0,
+                 clock_rate: float = 0.0,
+                 clock_jump_s: float = 10.0,
+                 storm_rate: float = 0.0,
+                 storm_size: int = 4,
+                 cancel_rate: float = 0.0,
+                 max_faults: Optional[int] = None,
+                 request_factory: Optional[Callable] = None,
+                 clock=None):
+        for name, rate in (("nan_rate", nan_rate),
+                           ("exhaust_rate", exhaust_rate),
+                           ("clock_rate", clock_rate),
+                           ("storm_rate", storm_rate),
+                           ("cancel_rate", cancel_rate)):
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {rate}")
+        if clock_rate > 0 and clock is None:
+            raise ValueError("clock_rate needs an injectable clock "
+                             "(pass clock=FakeClock instance)")
+        if storm_rate > 0 and request_factory is None:
+            raise ValueError("storm_rate needs request_factory "
+                             "(rng -> Request)")
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.nan_rate = nan_rate
+        self.exhaust_rate = exhaust_rate
+        self.clock_rate = clock_rate
+        self.clock_jump_s = float(clock_jump_s)
+        self.storm_rate = storm_rate
+        self.storm_size = int(storm_size)
+        self.cancel_rate = cancel_rate
+        self.max_faults = max_faults
+        self.request_factory = request_factory
+        self.clock = clock
+        # audit trail + affected-request bookkeeping for the chaos test's
+        # unaffected-requests-bitwise-equal oracle comparison
+        self.log: List[dict] = []
+        self.injected: List = []        # storm-submitted RequestStates
+        self.poisoned: set = set()      # request_ids hit by inject_nan
+        self.cancelled: set = set()     # request_ids cancelled by us
+        self.n_faults = 0
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultSchedule":
+        """Parse a ``REPRO_FAULTS`` spec: comma-separated ``key=value``
+        with keys seed / nan / exhaust / cancel / max_faults. Unknown
+        keys raise (a typo must not silently disable the fault)."""
+        kw = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            key, sep, val = item.partition("=")
+            if not sep or key not in _SPEC_KEYS:
+                raise ValueError(
+                    f"bad REPRO_FAULTS entry {item!r}: expected key=value "
+                    f"with key in {sorted(_SPEC_KEYS)}")
+            name, parse = _SPEC_KEYS[key]
+            kw[name] = parse(val)
+        return cls(kw.pop("seed", 0), **kw)
+
+    def _record(self, kind: str, step: int, **fields) -> None:
+        rec = {"kind": kind, "step": step}
+        rec.update(fields)
+        self.log.append(rec)
+        self.n_faults += 1
+
+    def __call__(self, engine) -> None:
+        """The per-step hook. Draws are consumed every step (even quiet
+        ones) so the fault sequence is a pure function of the seed, not
+        of which faults happened to be eligible."""
+        draws = self.rng.random(5)
+        if self.max_faults is not None and self.n_faults >= self.max_faults:
+            return
+        step = engine.stats["steps"]
+        if draws[0] < self.exhaust_rate and engine.overcommit:
+            engine._fault_exhaust_once = True
+            self._record("exhaust", step)
+        if draws[1] < self.nan_rate:
+            slots = [i for i, s in enumerate(engine._slots)
+                     if s is not None and s.status == RUNNING]
+            if slots:
+                slot = slots[int(self.rng.integers(len(slots)))]
+                self.poisoned.add(engine._slots[slot].request_id)
+                engine.inject_nan(slot)
+                self._record("nan", step, slot=slot,
+                             request_id=engine._slots[slot].request_id)
+        if draws[2] < self.clock_rate:
+            self.clock.advance(self.clock_jump_s)
+            self._record("clock_jump", step, jump_s=self.clock_jump_s)
+        if draws[3] < self.storm_rate:
+            burst = [engine.submit(self.request_factory(self.rng))
+                     for _ in range(self.storm_size)]
+            self.injected.extend(burst)
+            self._record("storm", step, n=len(burst),
+                         request_ids=[st.request_id for st in burst])
+        if draws[4] < self.cancel_rate:
+            live = engine.live_states()
+            if live:
+                victim = live[int(self.rng.integers(len(live)))]
+                if engine.cancel(victim.request_id):
+                    self.cancelled.add(victim.request_id)
+                    self._record("cancel", step,
+                                 request_id=victim.request_id)
+
+
+def run_chaos(engine, requests, schedule: FaultSchedule, *,
+              max_steps: int = 5000) -> dict:
+    """Drive ``engine`` through ``requests`` under ``schedule``, auditing
+    the robustness invariants after every step. Returns ``{"states",
+    "violations", "steps"}`` — states covers originals *and* the
+    schedule's storm-injected requests; an empty violations list is the
+    chaos property. Shared by the pytest chaos test and the
+    ``serving_fault_chaos`` gate, so CI and the test suite judge the
+    same contract."""
+    states = [engine.submit(r) for r in requests]
+    violations: List[str] = []
+    steps = 0
+    while engine.has_work() and steps < max_steps:
+        engine.step()
+        steps += 1
+        if engine.pool is not None:
+            for problem in engine.pool.check():
+                violations.append(f"step {steps}: pool: {problem}")
+    all_states = states + list(schedule.injected)
+    for st in all_states:
+        if not st.done:
+            violations.append(
+                f"request {st.request_id} never reached a terminal "
+                f"state: {st.status} after {steps} steps")
+    snap = engine.metrics.snapshot()
+    term = snap["terminal"]
+    if engine.metrics.enabled:
+        if term["in_flight"] != 0:
+            violations.append(
+                f"terminal conservation violated: in_flight="
+                f"{term['in_flight']} after drain ({term})")
+        if snap["counters"]["submitted"] != len(all_states):
+            violations.append(
+                f"submitted counter {snap['counters']['submitted']} != "
+                f"{len(all_states)} requests the harness knows about")
+    return {"states": all_states, "violations": violations, "steps": steps}

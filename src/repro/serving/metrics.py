@@ -217,6 +217,12 @@ COUNTER_NAMES = (
     # anything new. resume_prefill_tokens is the price overcommit pays for
     # its extra concurrency; read it against tokens_out.
     "preemptions", "blocks_reclaimed", "resume_prefill_tokens",
+    # robustness (schema v3): the non-FINISHED terminal outcomes —
+    # deadline expiries, client cancels, poisoned-row failures — and steps
+    # the wall-clock watchdog flagged as slower than its threshold. With
+    # `finished` (eos/length only) these satisfy the conservation identity
+    # submitted == finished + timed_out + cancelled + failed + in_flight.
+    "timed_out", "cancelled", "failed", "watchdog_slow_steps",
 )
 
 _HIST_KEYS = ("count", "mean", "min", "max", "p50", "p90", "p99")
@@ -237,9 +243,17 @@ SNAPSHOT_SCHEMA = {
     "phase_s": {name: dict.fromkeys(_PHASE_KEYS)
                 for name in ("host", "prefill", "device")},
     "throughput": {"tok_s": None, "goodput_tok_s": None},
+    # terminal-reason breakdown (schema v3): where every submitted request
+    # ended up. in_flight is derived (submitted minus the four terminal
+    # counters) so the section always satisfies the conservation identity.
+    "terminal": {"finished": None, "timed_out": None, "cancelled": None,
+                 "failed": None, "in_flight": None},
 }
 
-SCHEMA_VERSION = 2  # v2: + preemptions / blocks_reclaimed / resume_prefill_tokens
+# v2: + preemptions / blocks_reclaimed / resume_prefill_tokens
+# v3: + timed_out / cancelled / failed / watchdog_slow_steps counters and
+#     the "terminal" breakdown section (robustness layer)
+SCHEMA_VERSION = 3
 
 
 def check_snapshot(snap: dict) -> list:
@@ -357,14 +371,21 @@ class EngineMetrics:
         self.event("first_token", request_id=st.request_id, ttft_s=ttft)
 
     def on_retire(self, st, reason: str, horizon_waste: int) -> None:
+        """Any terminal outcome. ``reason`` "eos"/"length" counts as a
+        normal finish (tokens_finished feeds goodput); "timeout" /
+        "cancelled" / "failed" bump their own terminal counters instead —
+        their tokens were emitted but never delivered as a completion, so
+        they stay out of goodput by design."""
         if not self.enabled:
             return
         c = self.counters
-        c["finished"] += 1
-        key = f"finished_{reason}"
-        if key in c:
-            c[key] += 1
-        c["tokens_finished"] += len(st.tokens)
+        if reason in ("eos", "length"):
+            c["finished"] += 1
+            c[f"finished_{reason}"] += 1
+            c["tokens_finished"] += len(st.tokens)
+        else:
+            c[{"timeout": "timed_out", "cancelled": "cancelled",
+               "failed": "failed"}[reason]] += 1
         c["horizon_waste_steps"] += int(horizon_waste)
         e2e = st.finish_t - st.submit_t
         self.latency["e2e"].record(e2e)
@@ -434,6 +455,10 @@ class EngineMetrics:
         """The stable plain-dict export (see `SNAPSHOT_SCHEMA`)."""
         elapsed = max(self.clock() - self._t0, 0.0) if self.enabled else 0.0
         denom = max(elapsed, 1e-9)
+        c = self.counters
+        terminal = {k: c[k] for k in
+                    ("finished", "timed_out", "cancelled", "failed")}
+        terminal["in_flight"] = c["submitted"] - sum(terminal.values())
         return {
             "schema_version": SCHEMA_VERSION,
             "elapsed_s": elapsed,
@@ -446,6 +471,7 @@ class EngineMetrics:
                 "tok_s": self.counters["tokens_out"] / denom,
                 "goodput_tok_s": self.counters["tokens_finished"] / denom,
             },
+            "terminal": terminal,
         }
 
     def to_json(self, **dump_kw) -> str:

@@ -210,6 +210,58 @@ class BlockPool:
         self.table[slot, :] = TRASH
         return freed
 
+    def check(self) -> List[str]:
+        """Audit the pool's invariants; returns human-readable violation
+        strings (empty == sound). The chaos harness calls this after every
+        engine step — any fault interleaving that corrupts accounting
+        (double-free, leaked block, stale table entry) fails loudly here
+        instead of surfacing steps later as cross-request KV corruption.
+
+        Invariants: free + held partition {1..n_blocks} exactly (no block
+        lost, duplicated, or owned twice); TRASH is never free or held;
+        each table row maps exactly its held blocks in order, TRASH after;
+        conservative mode never holds beyond its reservation."""
+        problems: List[str] = []
+        free = list(self._free)
+        held_all = [b for held in self._held for b in held]
+        for name, ids in (("free list", free), ("held lists", held_all)):
+            if TRASH in ids:
+                problems.append(f"TRASH block in {name}")
+        combined = sorted(free + held_all)
+        expected = list(range(1, self.n_blocks + 1))
+        if combined != expected:
+            from collections import Counter
+            c = Counter(free + held_all)
+            dupes = sorted(b for b, n in c.items() if n > 1)
+            lost = sorted(set(expected) - set(c))
+            ghost = sorted(set(c) - set(expected) - {TRASH})
+            if dupes:
+                problems.append(f"blocks owned twice: {dupes}")
+            if lost:
+                problems.append(f"blocks lost (neither free nor held): {lost}")
+            if ghost:
+                problems.append(f"unknown block ids in circulation: {ghost}")
+        for slot in range(self.n_slots):
+            held = self._held[slot]
+            row = self.table[slot]
+            if list(row[:len(held)]) != held:
+                problems.append(
+                    f"slot {slot}: table prefix {list(row[:len(held)])} != "
+                    f"held {held}")
+            if any(int(b) != TRASH for b in row[len(held):]):
+                problems.append(
+                    f"slot {slot}: non-TRASH table entries past its "
+                    f"{len(held)} held blocks")
+            if not self.optimistic and len(held) > self._reserved[slot]:
+                problems.append(
+                    f"slot {slot}: holds {len(held)} blocks over its "
+                    f"reservation of {int(self._reserved[slot])}")
+        if not self.optimistic and self.reserved_blocks > self.n_blocks:
+            problems.append(
+                f"reservations ({self.reserved_blocks}) exceed the pool "
+                f"({self.n_blocks})")
+        return problems
+
     def stats(self) -> dict:
         return {
             "n_blocks": self.n_blocks,

@@ -17,6 +17,7 @@ kept so logs can be correlated with the outside world.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 
@@ -41,19 +42,50 @@ class SamplingParams:
 
 @dataclasses.dataclass(frozen=True)
 class Request:
+    """What a client submits. Every field is validated here, at submit
+    time, with an actionable message — a malformed request must fail on
+    the caller's stack, not steps later deep inside admission.
+
+    ``deadline_s`` / ``ttft_deadline_s`` are **relative** budgets in
+    seconds on the engine's monotonic clock, measured from ``submit_t``:
+    a request past its end-to-end deadline (or still token-less past its
+    TTFT deadline) is retired ``TIMED_OUT`` between device steps, and
+    deadline-aware admission refuses queued work that can no longer meet
+    its TTFT budget instead of wasting prefill on it."""
+
     prompt: tuple[int, ...]
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     priority: int = 0  # lower admits first; FIFO among equals
+    deadline_s: Optional[float] = None       # submit -> retire budget
+    ttft_deadline_s: Optional[float] = None  # submit -> first token budget
 
     def __post_init__(self):
         object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
         if not self.prompt:
-            raise ValueError("empty prompt")
+            raise ValueError(
+                "empty prompt: a request must carry at least one token id "
+                "(the engine has nothing to prefill)")
+        if any(t < 0 for t in self.prompt):
+            bad = next(t for t in self.prompt if t < 0)
+            raise ValueError(
+                f"prompt contains negative token id {bad}: ids must be "
+                ">= 0 (negative values are reserved for the engine's "
+                "failure sentinel)")
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        for name in ("deadline_s", "ttft_deadline_s"):
+            d = getattr(self, name)
+            if d is None:
+                continue
+            d = float(d)
+            if not math.isfinite(d) or d <= 0:
+                raise ValueError(
+                    f"{name} must be a finite number of seconds > 0, got "
+                    f"{d!r} (omit it — None — for no deadline)")
+            object.__setattr__(self, name, d)
         self.sampling.validate()
 
 
@@ -63,6 +95,16 @@ QUEUED, PREFILLING, RUNNING, FINISHED = \
 #: snapshot of its emitted tokens. Re-admission replays them (deterministic
 #: re-prefill + re-decode) before new tokens are emitted.
 PREEMPTED = "preempted"
+#: terminal failure statuses (PR 10 robustness layer): a request past its
+#: deadline, cancelled by the client, or whose row produced non-finite
+#: logits. All free their slot and pool blocks exactly like FINISHED; the
+#: difference is only how the outcome is reported (`finish_reason`,
+#: `RequestState.error`, the metrics terminal-reason breakdown).
+TIMED_OUT, CANCELLED, FAILED = "timed_out", "cancelled", "failed"
+
+#: every status a request can end in; `RequestState.done` is membership
+#: here, and the chaos harness asserts every submitted request reaches one.
+TERMINAL_STATUSES = frozenset((FINISHED, TIMED_OUT, CANCELLED, FAILED))
 
 
 @dataclasses.dataclass
@@ -79,7 +121,12 @@ class RequestState:
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
-    finish_reason: Optional[str] = None  # "eos" | "length"
+    #: "eos" | "length" (FINISHED) | "timeout" | "cancelled" | "failed"
+    finish_reason: Optional[str] = None
+    #: structured failure payload (status FAILED only): the non-finite
+    #: logit guard records the offending engine step, the horizon index
+    #: within its block, and how many tokens had streamed before the hit.
+    error: Optional[dict] = None
     # -- preemption / resume bookkeeping --------------------------------
     # FIFO stamp from the scheduler's first submit; preserved across
     # requeues so a preempted request re-enters ahead of everything that
@@ -98,7 +145,7 @@ class RequestState:
 
     @property
     def done(self) -> bool:
-        return self.status == FINISHED
+        return self.status in TERMINAL_STATUSES
 
     def output(self, *, strip_eos: bool = False) -> list[int]:
         toks = list(self.tokens)

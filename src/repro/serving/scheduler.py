@@ -59,6 +59,24 @@ class Scheduler:
         behind requests that were already ahead of it."""
         self.submit(state)
 
+    def states(self) -> list[RequestState]:
+        """Every queued state (heap order, not admission order) — the
+        engine's deadline sweep walks this to expire waiting requests."""
+        return [s for _, _, s in self._heap]
+
+    def remove(self, state: RequestState) -> bool:
+        """Drop ``state`` from the queue (cancellation / deadline expiry
+        of work that never got a slot). Identity match, O(n) + re-heapify;
+        returns False if it was not queued."""
+        for i, entry in enumerate(self._heap):
+            if entry[2] is state:
+                last = self._heap.pop()
+                if i < len(self._heap):
+                    self._heap[i] = last
+                    heapq.heapify(self._heap)
+                return True
+        return False
+
     def pop_admissions(self, n_free: int,
                        chunk: Optional[int] = None,
                        can_admit=None) -> list[RequestState]:

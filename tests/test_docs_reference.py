@@ -43,7 +43,12 @@ def test_reference_pins_serving_surface():
     ref = REFERENCE.read_text()
     for anchor in ("Server.generate", "Server.engine", "kv_block_size",
                    "kv_pool_tokens", "step_horizon", "prefill_chunk",
-                   "top_p", "eos_id", "BENCH_serving.json"):
+                   "top_p", "eos_id", "BENCH_serving.json",
+                   # robustness surface: deadlines, cancellation,
+                   # watchdog, fault injection, terminal conservation
+                   "deadline_s", "ttft_deadline_s", "Engine.cancel",
+                   "watchdog_s", "fault_hook", "FaultSchedule",
+                   "EngineStuck", "terminal"):
         assert anchor in ref, f"REFERENCE.md lost its {anchor!r} section"
 
 

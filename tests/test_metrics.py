@@ -371,3 +371,61 @@ def test_last_refusal_budget_verdict_not_sticky():
     out = sched.pop_admissions(2)
     assert [s.request_id for s in out] == [1]
     assert sched.last_refusal is None
+
+
+# ---------------------------------------------------------------------------
+# terminal-reason breakdown (schema v3): conservation across interleavings
+# ---------------------------------------------------------------------------
+
+
+def test_terminal_reason_conservation_across_interleavings(served):
+    """After *every* step of a run that interleaves preemption (scarce
+    overcommit pool), cancellation, and deadline expiry with normal
+    finishes: ``submitted == finished + timed_out + cancelled + failed +
+    in_flight``, with ``in_flight`` equal to the requests the harness can
+    still see live — and the identity closes at zero in-flight when the
+    engine drains."""
+    cfg, _, _ = served
+    clk = FakeClock()
+    eng = _engine(served, n_slots=2, prefill_bucket=4, kv_block_size=8,
+                  kv_pool_tokens=48, overcommit=True, clock=clk)
+    rng = np.random.default_rng(9)
+    prompts = _prompts(cfg, rng, 6, lo=3, hi=8)
+    states = []
+    for i, p in enumerate(prompts):
+        states.append(eng.submit(Request(
+            prompt=tuple(p), max_new_tokens=int(rng.integers(4, 12)),
+            # every third request carries a deadline the advancing clock
+            # will expire mid-run
+            deadline_s=6.0 if i % 3 == 0 else None)))
+    to_cancel = states[1]
+    step = 0
+    while eng.has_work():
+        eng.step()
+        step += 1
+        clk.advance(1.0)
+        if step == 3:
+            assert eng.cancel(to_cancel.request_id)
+        snap = eng.metrics.snapshot()
+        term = snap["terminal"]
+        c = snap["counters"]
+        assert c["submitted"] == (term["finished"] + term["timed_out"]
+                                  + term["cancelled"] + term["failed"]
+                                  + term["in_flight"])
+        live = sum(st.status not in ("finished", "timed_out", "cancelled",
+                                     "failed") for st in states)
+        assert term["in_flight"] == live
+        # counters agree with the engine's own stats, reason by reason
+        for key in ("finished", "timed_out", "cancelled", "failed"):
+            assert term[key] == c[key] == eng.stats[key]
+    term = eng.metrics.snapshot()["terminal"]
+    assert term["in_flight"] == 0
+    assert term["cancelled"] == 1
+    assert term["timed_out"] >= 1            # the 6s deadlines expired
+    assert eng.stats["preemptions"] >= 0     # scarce pool may preempt
+    assert check_snapshot(eng.metrics.snapshot()) == []
+    # goodput accounting: only eos/length completions feed tokens_finished
+    c = eng.metrics.counters
+    done_tokens = sum(len(st.tokens) for st in states
+                      if st.status == "finished")
+    assert c["tokens_finished"] == done_tokens

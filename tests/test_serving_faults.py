@@ -1,0 +1,518 @@
+"""Robustness-layer tests: deadlines, cancellation, failure isolation,
+and the seeded fault-injection chaos property.
+
+The load-bearing claims: (1) every failure is per-request — a timed-out,
+cancelled, or logit-poisoned request retires alone (slot and pool blocks
+freed like any retirement) while every other request's token stream stays
+bitwise equal to a fault-free run; (2) the NaN guard rides the step's
+existing single device→host transfer (no extra transfers, sentinel in the
+token block); (3) a stuck engine raises `EngineStuck` with an actionable
+diagnostic instead of a bare error or a hang; (4) under seeded random
+fault schedules (injected pool exhaustion, NaN logits, clock jumps,
+submit storms, cancels) the engine preserves pool block conservation
+after every step and terminates every request in a terminal state — the
+chaos property `run_chaos` also gates in ``run.py --check``.
+"""
+
+import contextlib
+import signal
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import tiny
+from repro.models import lm
+from repro.models.blocks import ModelContext
+from repro.models.quantized import QuantizeConfig, quantize_model
+from repro.serving import (CANCELLED, FAILED, TIMED_OUT, Engine,
+                           EngineStuck, FakeClock, FaultSchedule, Request,
+                           SamplingParams, run_chaos)
+from repro.serving.request import TERMINAL_STATUSES
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = tiny("dense")
+    ctx = ModelContext(cfg=cfg, remat=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_model(params, cfg, QuantizeConfig(w_bits=4, a_bits=8))
+    return cfg, ctx, qp
+
+
+def _engine(served, **kw):
+    cfg, ctx, qp = served
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prefill_bucket", 4)
+    return Engine(qp, cfg, ctx, **kw)
+
+
+def _prompts(cfg, rng, n, lo=3, hi=12):
+    return [rng.integers(0, cfg.vocab_size, size=int(s)).tolist()
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def _solo_output(served, request, **eng_kw):
+    """The fault-free oracle: the request run alone on a fresh engine."""
+    eng = _engine(served, **eng_kw)
+    st = eng.submit(Request(prompt=request.prompt,
+                            max_new_tokens=request.max_new_tokens,
+                            eos_id=request.eos_id,
+                            sampling=request.sampling))
+    eng.run()
+    return st.output()
+
+
+@contextlib.contextmanager
+def hard_timeout(seconds: int):
+    """SIGALRM hard stop: a hung engine must fail the test, not wedge the
+    suite (no pytest-timeout plugin in the container)."""
+    def fire(signum, frame):
+        raise TimeoutError(f"test exceeded {seconds}s hard timeout")
+
+    old = signal.signal(signal.SIGALRM, fire)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+# ---------------------------------------------------------------------------
+# submit-time request validation
+# ---------------------------------------------------------------------------
+
+
+def test_request_validation_actionable_errors():
+    with pytest.raises(ValueError, match="empty prompt"):
+        Request(prompt=())
+    with pytest.raises(ValueError, match="negative token id"):
+        Request(prompt=(3, -1, 5))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(prompt=(1,), max_new_tokens=0)
+    for bad in (float("nan"), float("inf"), 0.0, -2.5):
+        with pytest.raises(ValueError, match="deadline_s"):
+            Request(prompt=(1,), deadline_s=bad)
+        with pytest.raises(ValueError, match="ttft_deadline_s"):
+            Request(prompt=(1,), ttft_deadline_s=bad)
+    # valid deadlines coerce to float and survive
+    r = Request(prompt=(1, 2), deadline_s=3, ttft_deadline_s=1)
+    assert r.deadline_s == 3.0 and r.ttft_deadline_s == 1.0
+
+
+# ---------------------------------------------------------------------------
+# deadlines -> TIMED_OUT
+# ---------------------------------------------------------------------------
+
+
+def test_queued_request_times_out_without_admission(served):
+    """A queued request past its deadline is expired by the sweep without
+    ever taking a slot; deadline-less neighbors are untouched."""
+    clk = FakeClock()
+    eng = _engine(served, n_slots=1, clock=clk)
+    keep = eng.submit(Request(prompt=(1, 2, 3, 4), max_new_tokens=6))
+    doomed = eng.submit(Request(prompt=(5, 6, 7), max_new_tokens=6,
+                                deadline_s=2.0))
+    solo = _solo_output(served, keep.request, n_slots=1)
+    while eng.has_work():
+        eng.step()
+        clk.advance(1.0)
+    assert doomed.status == TIMED_OUT
+    assert doomed.finish_reason == "timeout"
+    assert doomed.tokens == []          # never admitted, nothing emitted
+    assert keep.status in TERMINAL_STATUSES and keep.output() == solo
+    assert eng.stats["timed_out"] == 1
+    assert eng.metrics.counters["timed_out"] == 1
+    assert eng.metrics.counters["finished"] == 1
+
+
+def test_running_request_times_out_and_frees_capacity(served):
+    """A running request expiring mid-decode retires TIMED_OUT between
+    device steps, keeps the tokens it already streamed, and its freed slot
+    admits queued work."""
+    clk = FakeClock()
+    eng = _engine(served, n_slots=1, clock=clk)
+    doomed = eng.submit(Request(prompt=(1, 2, 3, 4), max_new_tokens=30,
+                                deadline_s=3.5))
+    waiting = eng.submit(Request(prompt=(9, 8, 7), max_new_tokens=4))
+    solo = _solo_output(served, waiting.request, n_slots=1)
+    while eng.has_work():
+        eng.step()
+        clk.advance(1.0)
+    assert doomed.status == TIMED_OUT
+    assert 0 < len(doomed.tokens) < 30   # partial stream survives
+    assert waiting.output() == solo       # admitted into the freed slot
+    snap = eng.metrics.snapshot()
+    assert snap["terminal"]["timed_out"] == 1
+    assert snap["terminal"]["finished"] == 1
+    assert snap["terminal"]["in_flight"] == 0
+
+
+def test_ttft_deadline_only_binds_before_first_token(served):
+    """ttft_deadline_s expires a token-less request; once the first token
+    streamed the same elapsed time is fine (only deadline_s binds)."""
+    clk = FakeClock()
+    eng = _engine(served, n_slots=1, clock=clk)
+    # admitted immediately -> first token well inside the budget; the
+    # request then runs long past ttft_deadline_s without expiring
+    ok = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=5,
+                            ttft_deadline_s=4.0))
+    while eng.has_work():
+        eng.step()
+        clk.advance(1.0)
+    assert ok.status in TERMINAL_STATUSES
+    assert ok.finish_reason == "length"
+    assert len(ok.tokens) == 5
+
+    # stuck in the queue behind a long request -> expired by the sweep
+    clk2 = FakeClock()
+    eng2 = _engine(served, n_slots=1, clock=clk2)
+    eng2.submit(Request(prompt=(1, 2, 3, 4), max_new_tokens=30))
+    starved = eng2.submit(Request(prompt=(5, 6), max_new_tokens=4,
+                                  ttft_deadline_s=3.0))
+    while eng2.has_work():
+        eng2.step()
+        clk2.advance(1.0)
+    assert starved.status == TIMED_OUT
+    assert starved.first_token_t is None
+
+
+def test_ttft_hopeless_admission_refusal(served):
+    """Deadline-aware admission: queued work that cannot meet its TTFT
+    budget at the recent step pace is expired instead of admitted —
+    no prefill is wasted on a request whose client already gave up."""
+    clk = FakeClock()
+    eng = _engine(served, n_slots=2, clock=clk)
+    hopeless = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=4,
+                                  ttft_deadline_s=1.0))
+    # a step pace far beyond the budget (normally learned from the EWMA
+    # of real step wall time; pinned here for determinism)
+    eng._step_ewma = 5.0
+    eng.step()
+    assert hopeless.status == TIMED_OUT
+    assert eng.metrics.counters["admitted"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cancellation -> CANCELLED at every lifecycle stage
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_running_and_unknown(served):
+    clk = FakeClock()
+    eng = _engine(served, n_slots=1, clock=clk)
+    running = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=30))
+    queued = eng.submit(Request(prompt=(4, 5), max_new_tokens=4))
+    survivor = eng.submit(Request(prompt=(6, 7, 8), max_new_tokens=4))
+    solo = _solo_output(served, survivor.request, n_slots=1)
+
+    assert eng.cancel(queued.request_id)      # still QUEUED
+    assert queued.status == CANCELLED and queued.tokens == []
+    for _ in range(3):
+        eng.step()
+    assert eng.cancel(running.request_id)     # mid-decode, owns the slot
+    assert running.status == CANCELLED
+    assert 0 < len(running.tokens) < 30       # partial stream kept
+    assert not eng.cancel(999)                # unknown id
+    assert not eng.cancel(queued.request_id)  # already terminal
+    eng.run()
+    assert survivor.output() == solo          # unaffected, bitwise
+    assert eng.stats["cancelled"] == 2
+    snap = eng.metrics.snapshot()
+    assert snap["terminal"] == {"finished": 1, "timed_out": 0,
+                                "cancelled": 2, "failed": 0, "in_flight": 0}
+
+
+def test_cancel_prefilling_request(served):
+    """Cancel mid-chunked-prefill: the slot and its pool blocks free
+    immediately (no first token ever streams)."""
+    eng = _engine(served, n_slots=1, prefill_chunk=4, kv_block_size=8)
+    long_prompt = tuple(range(1, 17))  # 16 tokens -> 4 chunks
+    st = eng.submit(Request(prompt=long_prompt, max_new_tokens=4))
+    eng.step()                      # admits, prefills the first chunk
+    assert st.status == "prefilling"
+    held = eng.pool.used_blocks
+    assert held > 0
+    assert eng.cancel(st.request_id)
+    assert st.status == CANCELLED and st.tokens == []
+    assert eng.pool.used_blocks == 0          # blocks reclaimed
+    assert eng.pool.check() == []
+    assert not eng.has_work()
+
+
+def test_cancel_preempted_request(served):
+    """A preempted (queued-for-resume) request cancels cleanly out of the
+    scheduler heap."""
+    eng = _engine(served, n_slots=2, prefill_bucket=4, kv_block_size=8,
+                  kv_pool_tokens=48, overcommit=True)
+    a = eng.submit(Request(prompt=tuple(range(1, 9)), max_new_tokens=20))
+    b = eng.submit(Request(prompt=tuple(range(9, 17)), max_new_tokens=20))
+    # drive until the scarce pool (6 blocks for two growing rows) forces
+    # a preemption
+    for _ in range(60):
+        eng.step()
+        if eng.stats["preemptions"]:
+            break
+    preempted = a if a.status == "preempted" else b
+    assert preempted.status == "preempted"
+    assert eng.cancel(preempted.request_id)
+    assert preempted.status == CANCELLED
+    assert len(eng.scheduler) == 0            # pulled from the heap
+    eng.run()
+    assert eng.pool.check() == []
+    other = b if preempted is a else a
+    assert other.status in TERMINAL_STATUSES
+
+
+# ---------------------------------------------------------------------------
+# failure isolation: NaN logits -> FAILED, batchmates bitwise-unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_nan_poisoned_row_fails_alone_bitwise(served):
+    """A NaN injected into one row's logits retires only that request as
+    FAILED (offending step in the error payload); every other in-flight
+    request finishes bitwise equal to the no-fault oracle, and the guard
+    adds no device→host transfers (sentinel rides the token block)."""
+    cfg, _, _ = served
+    rng = np.random.default_rng(7)
+    prompts = _prompts(cfg, rng, 3, lo=3, hi=6)
+    eng = _engine(served, n_slots=3)
+    states = [eng.submit(Request(prompt=tuple(p), max_new_tokens=8,
+                                 sampling=SamplingParams(
+                                     greedy=(i != 1), temperature=0.9,
+                                     top_k=16, seed=i)))
+              for i, p in enumerate(prompts)]
+    solos = [_solo_output(served, st.request, n_slots=3) for st in states]
+
+    for _ in range(3):
+        eng.step()                 # all three rows running, some tokens out
+    victim = states[0]
+    assert victim.status == "running"
+    eng.inject_nan(victim.slot)
+    eng.run()
+
+    assert victim.status == FAILED
+    assert victim.finish_reason == "failed"
+    err = victim.error
+    assert err["kind"] == "non_finite_logits"
+    assert err["step"] > 0 and err["tokens_streamed"] == len(victim.tokens)
+    assert len(victim.tokens) < 8             # cut short by the fault
+    for st, solo in zip(states[1:], solos[1:]):
+        assert st.status not in (FAILED,)
+        assert st.output() == solo            # bitwise: fault never leaked
+    # the guard rides the existing single transfer per device step
+    assert eng.stats["transfers"] == eng.stats["device_steps"]
+    snap = eng.metrics.snapshot()
+    assert snap["terminal"]["failed"] == 1
+    assert snap["terminal"]["in_flight"] == 0
+
+
+def test_poison_mask_disarms_after_one_step(served):
+    """inject_nan is one-shot: after the poisoned step the same slot
+    serves a fresh request normally."""
+    eng = _engine(served, n_slots=1)
+    first = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=6))
+    eng.step()
+    eng.inject_nan(0)
+    eng.run()
+    assert first.status == FAILED
+    again = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=6))
+    eng.run()
+    assert again.finish_reason == "length"
+    assert len(again.tokens) == 6
+    with pytest.raises(ValueError, match="out of range"):
+        eng.inject_nan(5)
+
+
+# ---------------------------------------------------------------------------
+# watchdog + stuck-engine diagnostics
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_counts_slow_steps(served):
+    """Steps slower than watchdog_s are counted (engine never blocks);
+    an injected clock jump is what a stall looks like to the watchdog."""
+    clk = FakeClock()
+    jumps = {"n": 0}
+
+    def jump_twice(engine):
+        if engine.stats["steps"] in (2, 4):
+            clk.advance(9.0)
+            jumps["n"] += 1
+
+    eng = _engine(served, clock=clk, watchdog_s=1.0, fault_hook=jump_twice)
+    eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=8))
+    eng.run()
+    assert jumps["n"] == 2
+    assert eng.stats["slow_steps"] == 2
+    assert eng.metrics.counters["watchdog_slow_steps"] == 2
+
+
+def test_watchdog_env_default_and_validation(served, monkeypatch):
+    monkeypatch.setenv("REPRO_WATCHDOG_S", "2.5")
+    eng = _engine(served)
+    assert eng.watchdog_s == 2.5
+    monkeypatch.delenv("REPRO_WATCHDOG_S")
+    assert _engine(served).watchdog_s is None
+    with pytest.raises(ValueError, match="watchdog_s"):
+        _engine(served, watchdog_s=0.0)
+
+
+def test_engine_stuck_diagnostic_dump(served):
+    """Exhausting max_steps raises EngineStuck whose message names the
+    queue depth, per-slot request status, and terminal counters."""
+    eng = _engine(served, n_slots=1)
+    st = eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=30))
+    eng.submit(Request(prompt=(4, 5), max_new_tokens=4))
+    with pytest.raises(EngineStuck) as exc:
+        eng.run(max_steps=3)
+    msg = str(exc.value)
+    assert "did not drain in 3 steps" in msg
+    assert "queue: depth=1" in msg
+    assert f"request {st.request_id} running" in msg
+    assert "stats:" in msg and "timed_out=0" in msg
+    # EngineStuck is a RuntimeError: existing callers' handlers still work
+    assert isinstance(exc.value, RuntimeError)
+
+
+def test_run_timeout_s_bounds_wall_time(served):
+    clk = FakeClock()
+    eng = _engine(served, clock=clk,
+                  fault_hook=lambda e: clk.advance(1.0))
+    eng.submit(Request(prompt=(1, 2, 3), max_new_tokens=50))
+    with pytest.raises(EngineStuck, match="timeout_s=2.5"):
+        eng.run(timeout_s=2.5)
+
+
+# ---------------------------------------------------------------------------
+# injected pool exhaustion flows through real preemption
+# ---------------------------------------------------------------------------
+
+
+def test_injected_exhaust_preempts_and_recovers(served):
+    """An injected PoolExhausted must drive the genuine preemption
+    machinery (real victim, real resume-replay) — outputs stay bitwise
+    equal to a fault-free run and the pool audit stays clean."""
+    def run(fault_hook=None):
+        eng = _engine(served, n_slots=2, kv_block_size=8,
+                      overcommit=True, fault_hook=fault_hook)
+        a = eng.submit(Request(prompt=tuple(range(1, 7)),
+                               max_new_tokens=10))
+        b = eng.submit(Request(prompt=tuple(range(7, 13)),
+                               max_new_tokens=10))
+        eng.run()
+        assert eng.pool.check() == []
+        return eng, [a.output(), b.output()]
+
+    def exhaust_on_3(engine):
+        if engine.stats["steps"] == 3:
+            engine._fault_exhaust_once = True
+
+    _, clean = run()
+    eng, faulted = run(exhaust_on_3)
+    assert eng.stats["preemptions"] >= 1      # the fault really evicted
+    assert faulted == clean                   # replay resume is bitwise
+
+
+# ---------------------------------------------------------------------------
+# the chaos property
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_schedule_preserves_invariants(served):
+    """Seeded random fault schedule (exhaust + NaN + clock jumps + submit
+    storms + cancels) over an overcommit chunked paged engine: pool block
+    conservation holds after every step, every request (original and
+    storm-injected) terminates, metrics conserve, and originals the
+    faults never touched finish bitwise equal to their solo oracle."""
+    cfg, _, _ = served
+    with hard_timeout(300):
+        rng = np.random.default_rng(11)
+        clk = FakeClock()
+
+        def factory(frng):
+            n = int(frng.integers(3, 9))
+            return Request(
+                prompt=tuple(int(t) for t in
+                             frng.integers(0, cfg.vocab_size, size=n)),
+                max_new_tokens=int(frng.integers(2, 6)))
+
+        schedule = FaultSchedule(
+            seed=11, nan_rate=0.06, exhaust_rate=0.1, clock_rate=0.08,
+            clock_jump_s=8.0, storm_rate=0.05, storm_size=3,
+            cancel_rate=0.06, max_faults=12,
+            request_factory=factory, clock=clk)
+        eng = _engine(served, n_slots=4, prefill_chunk=4, kv_block_size=8,
+                      kv_pool_tokens=128, overcommit=True, clock=clk,
+                      fault_hook=schedule)
+        requests = [Request(prompt=tuple(p),
+                            max_new_tokens=int(g),
+                            deadline_s=40.0 if i % 3 == 0 else None)
+                    for i, (p, g) in enumerate(zip(
+                        _prompts(cfg, rng, 8, lo=3, hi=10),
+                        rng.integers(3, 8, size=8)))]
+        result = run_chaos(eng, requests, schedule, max_steps=3000)
+        assert result["violations"] == [], "\n".join(result["violations"])
+        assert schedule.n_faults > 0          # the schedule actually fired
+        assert eng.metrics.snapshot()["terminal"]["in_flight"] == 0
+
+        # unaffected originals == FINISHED originals: every fault class
+        # lands a different terminal status (nan->FAILED, cancel->
+        # CANCELLED, clock-jump->TIMED_OUT), so FINISHED means untouched
+        # — and untouched must be bitwise oracle-equal (preemption replay
+        # and batch composition cannot change a stream).
+        originals = result["states"][:len(requests)]
+        finished = [st for st in originals if st.status == "finished"]
+        assert finished, "chaos killed every original — weaken the rates"
+        for st in finished:
+            assert st.output() == _solo_output(
+                served, st.request, n_slots=4, prefill_chunk=4,
+                kv_block_size=8, kv_pool_tokens=128, overcommit=True)
+
+
+def test_chaos_schedule_is_deterministic(served):
+    """The same seed replays the same faults: audit logs and terminal
+    statuses are identical across runs."""
+    cfg, _, _ = served
+
+    def run_once():
+        clk = FakeClock()
+        schedule = FaultSchedule(seed=5, nan_rate=0.1, exhaust_rate=0.15,
+                                 cancel_rate=0.1, clock_rate=0.1,
+                                 clock_jump_s=6.0, max_faults=8, clock=clk)
+        eng = _engine(served, n_slots=3, kv_block_size=8,
+                      kv_pool_tokens=96, overcommit=True, clock=clk,
+                      fault_hook=schedule)
+        rng = np.random.default_rng(6)
+        reqs = [Request(prompt=tuple(p), max_new_tokens=5,
+                        deadline_s=30.0)
+                for p in _prompts(cfg, rng, 6, lo=3, hi=8)]
+        result = run_chaos(eng, reqs, schedule, max_steps=2000)
+        assert result["violations"] == []
+        return (schedule.log,
+                [st.status for st in result["states"]],
+                [st.tokens for st in result["states"]])
+
+    with hard_timeout(300):
+        assert run_once() == run_once()
+
+
+def test_fault_schedule_env_spec(served, monkeypatch):
+    """REPRO_FAULTS installs a FaultSchedule on a plain engine; the run
+    still satisfies all-terminal + conservation (no clock/storm faults
+    are possible from the env — they need injected collaborators)."""
+    monkeypatch.setenv("REPRO_FAULTS", "seed=2,nan=0.2,cancel=0.1")
+    eng = _engine(served, n_slots=2)
+    assert isinstance(eng.fault_hook, FaultSchedule)
+    states = [eng.submit(Request(prompt=(1 + i, 2, 3), max_new_tokens=5))
+              for i in range(4)]
+    with hard_timeout(120):
+        eng.run()
+    assert all(st.status in TERMINAL_STATUSES for st in states)
+    assert eng.metrics.snapshot()["terminal"]["in_flight"] == 0
+    with pytest.raises(ValueError, match="REPRO_FAULTS"):
+        FaultSchedule.from_spec("typo_rate=0.5")
